@@ -1,0 +1,36 @@
+"""Paper Figs. 7/10/13 (+ testbed Fig. 21): communication overhead (GB of
+model transfers) to reach target accuracies."""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_mech, time_to_acc, us_per_round
+
+MECHS = ("dystop", "sa-adfl", "asydfl", "matcha")
+
+
+def main(rounds: int = 240, workers: int = 40, target: float = 0.6,
+         sim_time: float = 2500.0) -> dict:
+    if rounds < 200:
+        sim_time = sim_time / 2
+    results = {}
+    for phi in (1.0, 0.4):
+        for mech in MECHS:
+            h = run_mech(mech, rounds=3000, workers=workers, phi=phi,
+                         sim_time=sim_time)
+            t, gb = time_to_acc(h, target)
+            results[(mech, phi)] = gb
+            emit(f"comm_overhead/{mech}/phi{phi}", us_per_round(h, max(h.rounds[-1], 1)),
+                 f"GB@{target:.0%}={'%.4f' % gb if gb else 'n/a'} "
+                 f"total_GB={h.comm_gb[-1]:.4f}")
+        dy = results[("dystop", phi)]
+        for other in ("sa-adfl", "asydfl"):
+            og = results[(other, phi)]
+            if dy and og:
+                emit(f"comm_overhead/reduction_vs_{other}/phi{phi}", 0.0,
+                     f"dystop_saves={100 * (1 - dy / og):.1f}%")
+    return results
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    main()

@@ -1,0 +1,55 @@
+"""Shared helpers for the benchmark harness.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows: `us_per_call` is
+the wall-clock microseconds per simulated round (or per kernel call), and
+`derived` carries the paper-relevant metric for that table/figure.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Optional
+
+from repro.core.baselines import get_mechanism
+from repro.dfl.simulator import History, SimConfig, run_simulation
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def header() -> None:
+    print("name,us_per_call,derived")
+
+
+def run_mech(name: str, *, rounds: int, workers: int, phi: float,
+             tau_bound: int = 5, V: float = 10.0, neighbors: Optional[int] = 7,
+             t_thre: Optional[int] = None, seed: int = 0,
+             target: Optional[float] = None, lr: float = 0.1,
+             sim_time: Optional[float] = None) -> History:
+    """`rounds` caps the round count; if `sim_time` is given, mechanisms are
+    compared at equal SIMULATED time (the paper's x-axis) — asynchronous
+    mechanisms then run many more (cheaper) rounds than synchronous ones."""
+    cfg = SimConfig(n_workers=workers, n_rounds=rounds, phi=phi,
+                    tau_bound=tau_bound, V=V, lr=lr, eval_every=max(rounds // 8, 5),
+                    seed=seed, target_accuracy=target, max_sim_time=sim_time)
+    kw = {}
+    if name == "dystop":
+        kw = {"V": V, "t_thre": t_thre if t_thre is not None else rounds // 8,
+              "max_neighbors": neighbors}
+    elif name == "sa-adfl":
+        kw = {"V": V}
+    elif name == "asydfl":
+        kw = {"n_neighbors": neighbors or 7}
+    return run_simulation(get_mechanism(name, **kw), cfg)
+
+
+def time_to_acc(hist: History, target: float):
+    for i, a in enumerate(hist.acc_global):
+        if a >= target:
+            return hist.sim_time[i], hist.comm_gb[i]
+    return None, None
+
+
+def us_per_round(hist: History, rounds: int) -> float:
+    return hist.wall_s / rounds * 1e6

@@ -1,0 +1,29 @@
+"""Paper Figs. 5-6/8-9/11-12: test accuracy + training loss vs simulated time
+for each mechanism at a given non-IID level."""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_mech, us_per_round
+
+MECHS = ("dystop", "sa-adfl", "asydfl", "matcha")
+
+
+def main(rounds: int = 240, workers: int = 40, phi: float = 0.7,
+         sim_time: float = 2500.0) -> dict:
+    if rounds < 200:
+        sim_time = sim_time / 2
+    results = {}
+    for mech in MECHS:
+        h = run_mech(mech, rounds=3000, workers=workers, phi=phi,
+                     sim_time=sim_time)
+        results[mech] = h
+        curve = " ".join(f"({t:.0f}s,{a:.3f})"
+                         for t, a in zip(h.sim_time, h.acc_global))
+        emit(f"convergence/{mech}/phi{phi}", us_per_round(h, max(h.rounds[-1], 1)),
+             f"acc_vs_time={curve} final_loss={h.loss_global[-1]:.3f}")
+    return results
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    main()

@@ -1,0 +1,51 @@
+"""Microbenchmarks for the Pallas kernels vs their jnp references.
+
+NOTE: on the CPU container the Pallas path runs in interpret mode, so absolute
+numbers measure the *reference/XLA* side realistically and the kernel side
+pessimistically; the TPU numbers come from the roofline analysis instead.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.kernels import ref as REF
+
+
+def _time(fn, *args, iters: int = 20) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    # aggregate: 100 workers x 1M flat params (the simulation hot spot)
+    W = jax.nn.softmax(jax.random.normal(key, (100, 100)), -1)
+    X = jax.random.normal(key, (100, 1_000_000))
+    agg = jax.jit(REF.aggregate_ref)
+    emit("kernel/aggregate_ref_100x1M", _time(agg, W, X),
+         "jnp oracle (XLA CPU); Pallas path validated in tests (interpret)")
+
+    q = jax.random.normal(key, (4, 8, 1024, 64), jnp.float32)
+    att = jax.jit(lambda q_: REF.flash_attention_ref(q_, q_, q_, causal=True))
+    emit("kernel/attention_ref_4x8x1024x64", _time(att, q, iters=5),
+         "jnp oracle causal attention")
+
+    logits = jax.random.normal(key, (65536, 384))
+    rt = jax.jit(lambda l: REF.moe_router_ref(l, 8))
+    emit("kernel/router_ref_65536x384_top8", _time(rt, logits, iters=5),
+         "jnp oracle softmax+top8+renorm")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    main()

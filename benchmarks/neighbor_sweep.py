@@ -1,0 +1,26 @@
+"""Paper Figs. 17-18: in-neighbor count s — accuracy vs communication
+trade-off (s = ceil(log2 N)/2, ceil(log2 N), 2*ceil(log2 N))."""
+from __future__ import annotations
+
+import math
+
+from benchmarks.common import emit, run_mech, us_per_round
+
+
+def main(rounds: int = 200, workers: int = 30, phi: float = 0.7) -> dict:
+    base = math.ceil(math.log2(workers))
+    results = {}
+    for s in (max(base // 2, 1), base, 2 * base):
+        h = run_mech("dystop", rounds=3000, workers=workers, phi=phi,
+                     sim_time=1500.0 if rounds >= 200 else 750.0,
+                     neighbors=s)
+        results[s] = h
+        emit(f"neighbors/s{s}", us_per_round(h, max(h.rounds[-1], 1)),
+             f"final_acc={h.acc_global[-1]:.3f} total_GB={h.comm_gb[-1]:.4f}")
+    return results
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    main()

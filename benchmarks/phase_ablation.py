@@ -1,0 +1,30 @@
+"""Paper Fig. 3: PTCA phase ablation — Phase-1-only (EMD pairing), Phase-2-only
+(diversity + staleness gap), and the combined phase-aware strategy."""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_mech, us_per_round
+
+
+def main(rounds: int = 200, workers: int = 30, phi: float = 0.4) -> dict:
+    settings = {
+        "phase1_only": 10 ** 9,       # t_thre = inf -> always p1
+        "phase2_only": 0,             # t_thre = 0   -> always p2
+        "combined": rounds // 4,      # the paper's strategy
+    }
+    results = {}
+    for name, t_thre in settings.items():
+        h = run_mech("dystop", rounds=3000, workers=workers, phi=phi,
+                     sim_time=1500.0 if rounds >= 200 else 750.0,
+                     t_thre=t_thre)
+        results[name] = h
+        mid = len(h.acc_global) // 2
+        emit(f"phase_ablation/{name}", us_per_round(h, max(h.rounds[-1], 1)),
+             f"early_acc={h.acc_global[mid // 2]:.3f} "
+             f"final_acc={h.acc_global[-1]:.3f}")
+    return results
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    main()

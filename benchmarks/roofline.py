@@ -1,0 +1,54 @@
+"""Roofline table (deliverable g): reads the dry-run JSON records under
+experiments/dryrun/ and prints the three-term roofline per (arch x shape x
+mesh), the dominant bottleneck, and the MODEL_FLOPS / HLO_FLOPs ratio."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_records(mesh: str | None = None, tag_filter: str | None = None):
+    recs = []
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("skipped"):
+            continue
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        is_tagged = any(c.isalpha() for c in f.stem.split("_")[-1]) and \
+            f.stem.split("_")[-1] not in ("single", "multi")
+        if tag_filter is None and is_tagged:
+            continue
+        recs.append(rec)
+    return recs
+
+
+def main(mesh: str = "single") -> None:
+    recs = load_records(mesh=mesh)
+    if not recs:
+        emit("roofline/none", 0.0, "no dry-run records; run repro.launch.dryrun first")
+        return
+    for r in recs:
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        derived = (f"t_comp={r['t_compute'] * 1e3:.2f}ms "
+                   f"t_mem={r['t_memory'] * 1e3:.2f}ms "
+                   f"t_coll={r['t_collective'] * 1e3:.2f}ms "
+                   f"bottleneck={r['bottleneck']} "
+                   f"useful_flops={r['useful_flops_ratio']:.3f}")
+        emit(name, r["t_compute"] * 1e6 + r["t_memory"] * 1e6 + r["t_collective"] * 1e6,
+             derived)
+    bn = {}
+    for r in recs:
+        bn[r["bottleneck"]] = bn.get(r["bottleneck"], 0) + 1
+    emit("roofline/summary", 0.0,
+         f"records={len(recs)} bottlenecks={bn}")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    main()

@@ -1,0 +1,66 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV.  `us_per_call` is wall-clock
+microseconds per simulated round (or kernel call); `derived` carries the
+paper metric for that table.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (bound_check, comm_overhead, completion_time,
+                        convergence_curves, kernels_bench, neighbor_sweep,
+                        phase_ablation, roofline, staleness_sweep, v_sweep)
+from benchmarks.common import header
+
+SUITES = {
+    # paper Fig. 4 / Fig. 20
+    "completion_time": lambda q: completion_time.main(rounds=120 if q else 240),
+    # paper Figs. 5-6 / 8-9 / 11-12 / 22-25
+    "convergence_curves": lambda q: convergence_curves.main(rounds=120 if q else 240),
+    # paper Figs. 7/10/13 / 21
+    "comm_overhead": lambda q: comm_overhead.main(rounds=120 if q else 240),
+    # paper Figs. 14-15
+    "staleness_sweep": lambda q: staleness_sweep.main(rounds=100 if q else 200),
+    # paper Fig. 16
+    "v_sweep": lambda q: v_sweep.main(rounds=100 if q else 200),
+    # paper Figs. 17-18
+    "neighbor_sweep": lambda q: neighbor_sweep.main(rounds=100 if q else 200),
+    # paper Fig. 3
+    "phase_ablation": lambda q: phase_ablation.main(rounds=100 if q else 200),
+    # Theorem 1 bound evaluated on recorded histories
+    "bound_check": lambda q: bound_check.main(rounds=60 if q else 120),
+    # kernel microbenchmarks
+    "kernels": lambda q: kernels_bench.main(),
+    # deliverable (g): roofline table from the dry-run artifacts
+    "roofline": lambda q: roofline.main(),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None, choices=list(SUITES))
+    args = ap.parse_args()
+
+    header()
+    t0 = time.time()
+    for name, fn in SUITES.items():
+        if args.only and name != args.only:
+            continue
+        t1 = time.time()
+        try:
+            fn(args.quick)
+        except Exception as e:  # keep the harness going; report the failure
+            print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}", file=sys.stdout)
+            raise
+        print(f"# {name} done in {time.time() - t1:.1f}s", file=sys.stderr)
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

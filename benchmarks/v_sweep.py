@@ -1,0 +1,28 @@
+"""Paper Fig. 16: the Lyapunov trade-off parameter V (staleness stability vs
+round-duration minimization)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, run_mech, time_to_acc, us_per_round
+
+
+def main(rounds: int = 200, workers: int = 30, phi: float = 0.7,
+         target: float = 0.5) -> dict:
+    results = {}
+    for V in (1.0, 10.0, 50.0, 100.0):
+        h = run_mech("dystop", rounds=3000, workers=workers, phi=phi,
+                     sim_time=1500.0 if rounds >= 200 else 750.0, V=V)
+        results[V] = h
+        t, _ = time_to_acc(h, target)
+        emit(f"v_sweep/V{V:g}", us_per_round(h, max(h.rounds[-1], 1)),
+             f"final_acc={h.acc_global[-1]:.3f} "
+             f"t@{target:.0%}={'%.1f' % t if t else 'n/a'}s "
+             f"avg_staleness={np.mean(h.staleness_avg):.2f}")
+    return results
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    main()

@@ -1,0 +1,53 @@
+"""Generate the EXPERIMENTS.md roofline tables from experiments/dryrun/*.json.
+
+    PYTHONPATH=src python scripts/gen_roofline_md.py [single|multi]
+"""
+import json
+import pathlib
+import sys
+
+DRY = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+REMEDY = {
+    ("memory", "train"): "fuse attention score traffic (Pallas flash kernel keeps the online-softmax accumulator in VMEM)",
+    ("memory", "prefill"): "flash-attention fusion of the (S,S) score chain",
+    ("memory", "serve"): "KV-cache layout: batch the single-token matmuls, quantize cache to int8",
+    ("memory", "dystop_round"): "flash-attention fusion inside the per-pod step",
+    ("collective", "train"): "co-shard MoE contraction with expert fsdp axis (psum instead of weight all-gather); overlap collectives with compute",
+    ("collective", "prefill"): "same as train: contraction co-sharding + overlap",
+    ("collective", "serve"): "replicate small per-step tensors; batch collectives across layers",
+    ("collective", "dystop_round"): "amortize pod aggregation over local steps",
+    ("compute", "train"): "already compute-bound: raise MXU utilization via 128-aligned tiles",
+}
+
+
+def fmt(recs, mesh):
+    rows = []
+    rows.append("| arch | shape | mode | t_comp | t_mem | t_coll | bottleneck | MODEL_FLOPS | useful | what moves the dominant term |")
+    rows.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("skipped") or r.get("mesh") != mesh:
+            continue
+        remedy = REMEDY.get((r["bottleneck"], r["mode"]), "—")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mode']} "
+            f"| {r['t_compute']*1e3:.1f}ms | {r['t_memory']*1e3:.1f}ms "
+            f"| {r['t_collective']*1e3:.1f}ms | **{r['bottleneck']}** "
+            f"| {r['model_flops']:.2e} | {r['useful_flops_ratio']:.2f} "
+            f"| {remedy} |")
+    return "\n".join(rows)
+
+
+def main():
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    recs = []
+    for f in sorted(DRY.glob("*.json")):
+        stem_tail = f.stem.split("_")[-1]
+        if stem_tail not in ("single", "multi"):
+            continue  # tagged perf-iteration records live in §Perf instead
+        recs.append(json.loads(f.read_text()))
+    print(fmt(recs, mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Perf hillclimb driver (EXPERIMENTS.md section "Perf").
+
+Runs the three chosen (arch x shape) pairs through their iteration ladders,
+tagging each dry-run JSON so the before/after lives in experiments/dryrun/.
+
+    PYTHONPATH=src python scripts/perf_hillclimb.py [h1|h2|h3 ...]
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.dryrun import run_one  # sets the 512-device XLA flag first
+import jax
+
+
+def emit(tag, rec):
+    print(f"== {tag}: t_comp={rec['t_compute']*1e3:.1f}ms "
+          f"t_mem={rec['t_memory']*1e3:.1f}ms t_coll={rec['t_collective']*1e3:.1f}ms "
+          f"bottleneck={rec['bottleneck']} useful={rec['useful_flops_ratio']:.3f}",
+          flush=True)
+
+
+def h1():
+    """Memory-bound pick (worst useful-flops dense arch): smollm-135m train_4k.
+    Iter 1: chunked (online-softmax) attention — kill the (S,S) score traffic.
+    Iter 2: + context-parallel q_seq (15 heads don't shard over model=16)."""
+    emit("h1_iter0_baseline",
+         run_one("smollm-135m", "train_4k", False, tag="h1_iter0"))
+    jax.clear_caches()
+    emit("h1_iter1_chunked",
+         run_one("smollm-135m", "train_4k", False, attn_impl="chunked",
+                 tag="h1_chunked"))
+    jax.clear_caches()
+    emit("h1_iter2_chunked_cp",
+         run_one("smollm-135m", "train_4k", False, attn_impl="chunked",
+                 rule_overrides={"q_seq": ("model",)}, tag="h1_chunked_cp"))
+    jax.clear_caches()
+
+
+def h2():
+    """Collective-bound pick: kimi-k2-1t train_4k (847s t_coll baseline).
+    Iter 1: co-shard the MoE contraction dim with the expert weights' fsdp
+    axis -> psum of partials instead of all-gathering expert weights.
+    Iter 2: + chunked attention for the memory term."""
+    emit("h2_iter0_baseline",
+         run_one("kimi-k2-1t-a32b", "train_4k", False, tag="h2_iter0"))
+    jax.clear_caches()
+    emit("h2_iter1_psum_moe",
+         run_one("kimi-k2-1t-a32b", "train_4k", False,
+                 rule_overrides={"moe_contract": ("data",)}, tag="h2_psum"))
+    jax.clear_caches()
+    emit("h2_iter2_psum_chunked",
+         run_one("kimi-k2-1t-a32b", "train_4k", False, attn_impl="chunked",
+                 rule_overrides={"moe_contract": ("data",)},
+                 tag="h2_psum_chunked"))
+    jax.clear_caches()
+
+
+def h3():
+    """Paper-representative pick: the full DySTop round (train + pod-level
+    staleness-weighted aggregation) for gemma2-2b train_4k on the 512-chip
+    multi-pod mesh.
+    Iter 1: interior sharding rules under the pod-vmap (baseline leaves layout
+    to XLA). Iter 2: amortize the pod aggregation over 4 local steps (the DFL
+    analogue of local-SGD). Iter 3: + chunked attention."""
+    emit("h3_iter0_noctx",
+         run_one("gemma2-2b", "train_4k", True, paper_mode=True,
+                 paper_ctx=False, tag="h3_iter0"))
+    jax.clear_caches()
+    emit("h3_iter1_ctx",
+         run_one("gemma2-2b", "train_4k", True, paper_mode=True,
+                 tag="h3_iter1"))
+    jax.clear_caches()
+    emit("h3_iter2_local4",
+         run_one("gemma2-2b", "train_4k", True, paper_mode=True,
+                 local_steps=4, tag="h3_iter2"))
+    jax.clear_caches()
+    emit("h3_iter3_local4_chunked",
+         run_one("gemma2-2b", "train_4k", True, paper_mode=True,
+                 local_steps=4, attn_impl="chunked", tag="h3_iter3"))
+    jax.clear_caches()
+
+
+if __name__ == "__main__":
+    which = sys.argv[1:] or ["h1", "h2", "h3"]
+    for name in which:
+        print(f"---- hillclimb {name} ----", flush=True)
+        {"h1": h1, "h2": h2, "h3": h3}[name]()

@@ -1,0 +1,56 @@
+"""Follow-up perf iterations (see scripts/perf_hillclimb.py).
+
+H1 iter 3/4: disentangle the chunked-vs-context-parallel interaction; larger
+kv chunks amortize the scan-accumulator round-trips that refuted iter 1.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.dryrun import run_one
+import jax
+
+
+def emit(tag, rec):
+    print(f"== {tag}: t_comp={rec['t_compute']*1e3:.1f}ms "
+          f"t_mem={rec['t_memory']*1e3:.1f}ms t_coll={rec['t_collective']*1e3:.1f}ms "
+          f"bottleneck={rec['bottleneck']} useful={rec['useful_flops_ratio']:.3f}",
+          flush=True)
+
+
+if __name__ == "__main__":
+    # H1 iter3: context parallel alone (naive attention) — isolate cp's effect
+    emit("h1_iter3_cp_only",
+         run_one("smollm-135m", "train_4k", False,
+                 rule_overrides={"q_seq": ("model",)}, tag="h1_cp_only"))
+    jax.clear_caches()
+    # H1 iter4: cp + chunked with 2048-wide kv blocks (4 accumulator
+    # round-trips instead of 8 — tests the acc-traffic hypothesis from iter1)
+    import dataclasses
+    from repro.launch import dryrun as D
+    from repro.models import registry as R
+    # widen the chunk via attn_chunk: patch through run_one's attn_impl +
+    # a temporary config override
+    orig = R.get_config
+
+    def patched(arch):
+        cfg = orig(arch)
+        return dataclasses.replace(cfg, attn_chunk=2048)
+
+    R.get_config = patched
+    try:
+        emit("h1_iter4_cp_chunk2048",
+             run_one("smollm-135m", "train_4k", False, attn_impl="chunked",
+                     rule_overrides={"q_seq": ("model",)}, tag="h1_cp_chunk2048"))
+    finally:
+        R.get_config = orig
+    jax.clear_caches()
+
+
+def h2_iter3():
+    emit("h2_iter3_rscatter",
+         run_one("kimi-k2-1t-a32b", "train_4k", False,
+                 rule_overrides={"moe_contract": ("data",),
+                                 "moe_h_cap": ("data",)},
+                 tag="h2_rscatter"))
+    jax.clear_caches()

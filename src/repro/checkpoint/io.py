@@ -1,0 +1,89 @@
+"""Checkpointing: pytrees -> one .npz (arrays) + one msgpack (treedef +
+coordinator state).  No orbax in this container; this is deliberately simple,
+atomic (write-to-temp + rename), and covers params, optimizer state, and the
+DySTop control-plane state (staleness vectors, queues, pull counts).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jax.numpy.bfloat16:
+            flat[key + "::bf16"] = arr.view(np.uint16)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def save_checkpoint(path: str | pathlib.Path, params: Any,
+                    opt_state: Optional[Any] = None,
+                    extra: Optional[Dict[str, Any]] = None) -> None:
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    blobs = {}
+    for name, tree in (("params", params), ("opt", opt_state)):
+        if tree is None:
+            continue
+        for k, v in _flatten_with_paths(tree).items():
+            blobs[f"{name}|{k}"] = v
+    meta = {"extra": _jsonify(extra or {})}
+    tmp = path.with_name(path.name + f".tmp-{os.getpid()}.npz")
+    try:
+        np.savez(tmp, __meta__=json.dumps(meta), **blobs)
+        os.replace(tmp, path)
+    finally:
+        if tmp.exists():
+            tmp.unlink()
+
+
+def load_checkpoint(path: str | pathlib.Path, params_template: Any,
+                    opt_template: Optional[Any] = None
+                    ) -> Tuple[Any, Optional[Any], Dict[str, Any]]:
+    """Restores into the templates' tree structure (+dtypes)."""
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["__meta__"]))
+        blobs = {k: z[k] for k in z.files if k != "__meta__"}
+
+    def restore(tree, prefix):
+        leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)
+        out = []
+        for path_, leaf in leaves_with_paths[0]:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path_)
+            full = f"{prefix}|{key}"
+            if full + "::bf16" in blobs:
+                arr = blobs[full + "::bf16"].view(jax.numpy.bfloat16)
+            elif full in blobs:
+                arr = blobs[full]
+            else:
+                raise KeyError(f"checkpoint missing {full}")
+            out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+        return jax.tree_util.tree_unflatten(leaves_with_paths[1], out)
+
+    params = restore(params_template, "params")
+    opt = restore(opt_template, "opt") if opt_template is not None else None
+    return params, opt, meta.get("extra", {})
+
+
+def _jsonify(obj):
+    if isinstance(obj, dict):
+        return {k: _jsonify(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonify(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, (np.integer, np.floating)):
+        return obj.item()
+    return obj

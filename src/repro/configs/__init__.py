@@ -1,0 +1,3 @@
+from repro.configs.base import INPUT_SHAPES, ModelConfig, MoEConfig, SSMConfig, ShapeSpec
+
+__all__ = ["INPUT_SHAPES", "ModelConfig", "MoEConfig", "SSMConfig", "ShapeSpec"]

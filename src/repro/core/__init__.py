@@ -1,0 +1,5 @@
+from repro.core.protocol import DySTop, Mechanism, RoundContext, RoundDecision
+from repro.core.staleness import StalenessState, drift_plus_penalty
+
+__all__ = ["DySTop", "Mechanism", "RoundContext", "RoundDecision",
+           "StalenessState", "drift_plus_penalty"]

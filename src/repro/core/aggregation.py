@@ -1,0 +1,58 @@
+"""Model aggregation (paper Eq. 4) over the stacked-worker representation.
+
+The simulation plane keeps all N worker models as one pytree whose leaves have
+a leading worker axis.  Eq. 4 for every activated worker is then a single
+row-stochastic mixing matrix applied per leaf:
+
+    W[i, :] = sigma_t^{i, .}   if i activated (data-size weights over pulled
+                                 in-neighbors + self)
+    W[i, :] = e_i              otherwise
+
+which is exactly the shape the Pallas ``aggregate`` kernel accelerates
+(N x N times N x P tiles); the jnp einsum here is the reference/lowering path.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def mixing_matrix(active: np.ndarray, links: np.ndarray,
+                  data_sizes: np.ndarray) -> np.ndarray:
+    """Row-stochastic W (N, N) float32 per Eq. 4.
+
+    links[i, j] = 1 iff worker i mixes in j's model this round (DySTop: only
+    activated workers pull; SA-ADFL-style push baselines also set rows of the
+    receiving neighbors).  The in-neighbor set includes i itself; weights are
+    relative data sizes sigma_t^{i,j} = D_j / sum_{j' in N_i} D_j'."""
+    n = len(active)
+    W = np.eye(n, dtype=np.float32)
+    d = np.asarray(data_sizes, np.float64)
+    rows = np.flatnonzero(np.asarray(active, bool) | links.any(axis=1))
+    for i in rows:
+        neigh = np.flatnonzero(links[i])
+        members = np.unique(np.concatenate([neigh, [i]]))
+        w = d[members] / d[members].sum()
+        W[i, :] = 0.0
+        W[i, members] = w.astype(np.float32)
+    return W
+
+
+def apply_mixing(W: jnp.ndarray, stacked_models: Any, use_kernel: bool = True) -> Any:
+    """new_models = W @ models, per leaf.  Leaves: (N, ...)."""
+    if use_kernel:
+        from repro.kernels import ops as K
+
+        def mix(leaf):
+            flat = leaf.reshape(leaf.shape[0], -1)
+            out = K.aggregate(W, flat.astype(jnp.float32))
+            return out.reshape(leaf.shape).astype(leaf.dtype)
+    else:
+        def mix(leaf):
+            flat = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
+            return (W @ flat).reshape(leaf.shape).astype(leaf.dtype)
+
+    return jax.tree.map(mix, stacked_models)

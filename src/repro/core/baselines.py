@@ -1,0 +1,142 @@
+"""The paper's comparison mechanisms (Table I / section VI-A3), re-implemented
+on the same round engine so completion-time and communication accounting are
+apples-to-apples.
+
+* MATCHA  [9]  — synchronous; matching decomposition of the base graph,
+                 subgraphs sampled each round.  Paper treats it as the
+                 communication lower bound among benchmarks.
+* AsyDFL  [14] — asynchronous; finished-workers activate, random neighbor
+                 subset; NO staleness control.
+* SA-ADFL [15] — asynchronous; dynamic staleness control but activates ONE
+                 worker per round and pushes its model to ALL in-range
+                 neighbors (the overhead DySTop removes).
+* GossipFL[7]  — synchronous sparsified gossip: one peer per worker per round.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import waa as WA
+from repro.core.protocol import Mechanism, RoundContext, RoundDecision
+
+
+def _matching_decomposition(adj: np.ndarray, rng: np.random.Generator
+                            ) -> List[np.ndarray]:
+    """Greedy edge-coloring of the undirected base graph into matchings."""
+    n = adj.shape[0]
+    edges = [(i, j) for i in range(n) for j in range(i + 1, n) if adj[i, j]]
+    rng.shuffle(edges)
+    matchings: List[List[tuple]] = []
+    for (i, j) in edges:
+        placed = False
+        for m in matchings:
+            if all(i not in e and j not in e for e in m):
+                m.append((i, j))
+                placed = True
+                break
+        if not placed:
+            matchings.append([(i, j)])
+    out = []
+    for m in matchings:
+        a = np.zeros((n, n), bool)
+        for (i, j) in m:
+            a[i, j] = a[j, i] = True
+        out.append(a)
+    return out
+
+
+class MATCHA(Mechanism):
+    name = "matcha"
+
+    def __init__(self, activation_ratio: float = 0.5, seed: int = 0):
+        self.cb = activation_ratio
+        self._matchings: Optional[List[np.ndarray]] = None
+        self._seed = seed
+
+    def round(self, ctx: RoundContext) -> RoundDecision:
+        if self._matchings is None:
+            rng = np.random.default_rng(self._seed)
+            self._matchings = _matching_decomposition(ctx.in_range, rng)
+        n = len(ctx.round_cost)
+        links = np.zeros((n, n), bool)
+        for m in self._matchings:
+            if ctx.rng.random() < self.cb:
+                links |= m
+        # synchronous: every worker aggregates + trains every round
+        return RoundDecision(active=np.ones(n, bool), links=links,
+                             synchronous=True)
+
+
+class GossipFL(Mechanism):
+    name = "gossipfl"
+
+    def round(self, ctx: RoundContext) -> RoundDecision:
+        n = len(ctx.round_cost)
+        links = np.zeros((n, n), bool)
+        for i in range(n):
+            cand = np.flatnonzero(ctx.in_range[i])
+            if len(cand):
+                links[i, ctx.rng.choice(cand)] = True
+        return RoundDecision(active=np.ones(n, bool), links=links,
+                             synchronous=True)
+
+
+class AsyDFL(Mechanism):
+    """Asynchronous, no staleness control: the workers whose background local
+    training has finished aggregate from a random neighbor subset."""
+    name = "asydfl"
+
+    def __init__(self, n_neighbors: int = 7, frac_activate: float = 0.1):
+        self.s = n_neighbors
+        self.frac = frac_activate
+
+    def round(self, ctx: RoundContext) -> RoundDecision:
+        n = len(ctx.round_cost)
+        k = max(1, int(self.frac * n))
+        active = np.zeros(n, bool)
+        # FIFO over finish times: the workers whose background training
+        # completed earliest aggregate next (no staleness control)
+        active[np.argsort(ctx.readiness, kind="stable")[:k]] = True
+        links = np.zeros((n, n), bool)
+        for i in np.flatnonzero(active):
+            cand = np.flatnonzero(ctx.in_range[i])
+            if len(cand):
+                pick = ctx.rng.choice(cand, size=min(self.s, len(cand)),
+                                      replace=False)
+                links[i, pick] = True
+        return RoundDecision(active=active, links=links)
+
+
+class SAADFL(Mechanism):
+    """SA-ADFL: staleness-aware activation of a SINGLE worker per round, which
+    pulls from and pushes to ALL in-range neighbors (paper section II-C)."""
+    name = "sa-adfl"
+
+    def __init__(self, V: float = 10.0):
+        self.V = V
+
+    def round(self, ctx: RoundContext) -> RoundDecision:
+        active, _ = WA.worker_activation(ctx.staleness, ctx.round_cost, self.V,
+                                         max_workers=1)
+        n = len(ctx.round_cost)
+        links = np.zeros((n, n), bool)
+        w = int(np.flatnonzero(active)[0])
+        neigh = np.flatnonzero(ctx.in_range[w])
+        links[w, neigh] = True          # pull from all neighbors
+        links[neigh, w] = True          # push to all neighbors (they mix it in)
+        # receivers integrate the pushed model and continue their own local
+        # training (SA-ADFL workers train continuously; the push triggers the
+        # update materialization on their side too)
+        active = active.copy()
+        active[neigh] = True
+        return RoundDecision(active=active, links=links)
+
+
+def get_mechanism(name: str, **kw) -> Mechanism:
+    from repro.core.protocol import DySTop
+
+    table = {"dystop": DySTop, "matcha": MATCHA, "gossipfl": GossipFL,
+             "asydfl": AsyDFL, "sa-adfl": SAADFL}
+    return table[name](**kw)

@@ -1,0 +1,107 @@
+"""DySTop round engine (paper Alg. 1) + the pods-as-workers production mixing.
+
+A ``Mechanism`` makes per-round control-plane decisions: which workers to
+activate (EXECUTE) and which links to build (the neighbors each activated
+worker PULLs from).  ``DySTop`` = WAA (Alg. 2) + PTCA (Alg. 3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+from repro.core import ptca as PT
+from repro.core import waa as WA
+from repro.core.staleness import StalenessState
+
+
+@dataclasses.dataclass
+class RoundContext:
+    """Everything the coordinator can see at the start of round t (scalars per
+    worker — it never touches model weights)."""
+    t: int
+    round_cost: np.ndarray        # (N,) H_t^i estimate (Eq. 8)
+    readiness: np.ndarray         # (N,) h_i - time-since-activation (FIFO order:
+                                  #   most negative = finished longest ago)
+    in_range: np.ndarray          # (N, N) bool
+    class_counts: np.ndarray      # (N, C)
+    phys_dist: np.ndarray         # (N, N)
+    pull_counts: np.ndarray       # (N, N)
+    staleness: StalenessState
+    bandwidth_budget: np.ndarray  # (N,) transfers of size b per round
+    data_sizes: np.ndarray        # (N,)
+    rng: np.random.Generator
+
+
+@dataclasses.dataclass
+class RoundDecision:
+    active: np.ndarray            # (N,) bool
+    links: np.ndarray             # (N, N) bool: i pulls from j
+    synchronous: bool = False     # sync mechanisms pay full h_i each round
+
+
+class Mechanism:
+    name = "base"
+
+    def round(self, ctx: RoundContext) -> RoundDecision:  # pragma: no cover
+        raise NotImplementedError
+
+
+class DySTop(Mechanism):
+    """The paper's mechanism: Lyapunov worker activation + phase-aware topology."""
+    name = "dystop"
+
+    def __init__(self, V: float = 10.0, t_thre: int = 50,
+                 max_neighbors: Optional[int] = 7,
+                 max_workers: Optional[int] = None):
+        self.V = V
+        self.t_thre = t_thre
+        self.max_neighbors = max_neighbors
+        self.max_workers = max_workers
+
+    def round(self, ctx: RoundContext) -> RoundDecision:
+        active, _ = WA.worker_activation(ctx.staleness, ctx.round_cost, self.V,
+                                         self.max_workers)
+        top = PT.ptca(ctx.t, self.t_thre, active, ctx.in_range, ctx.class_counts,
+                      ctx.phys_dist, ctx.pull_counts, ctx.staleness.tau,
+                      ctx.bandwidth_budget, self.max_neighbors)
+        return RoundDecision(active=active, links=top.links)
+
+
+# --------------------------------------------------------------------------- #
+# production plane: pods as DFL workers
+# --------------------------------------------------------------------------- #
+
+
+def dystop_pod_mix(stacked_params, W: jnp.ndarray, mesh):
+    """Weighted cross-pod aggregation (Eq. 4 with pods as DFL workers).
+
+    Each pod of the multi-pod mesh holds one DFL replica: param leaves carry a
+    leading pod axis sharded over the ``pod`` mesh axis, so each pod's shard
+    IS its replica.  One round of DySTop aggregation = all_gather over the
+    ``pod`` axis + each pod applying its own row of the (n_pods x n_pods)
+    staleness-aware mixing matrix ``W`` — exactly the PULL+aggregate of
+    Alg. 1 with ICI links as the transport.  The coordinator (WAA/PTCA)
+    stays host-side between steps, as in the paper.
+    """
+    def mix_leaf(leaf):
+        spec = P("pod", *([None] * (leaf.ndim - 1)))
+
+        def inner(w, x):                                   # x: (1, ...) my replica
+            gathered = jax.lax.all_gather(x, "pod", axis=0, tiled=True)
+            me = jax.lax.axis_index("pod")
+            row = jax.lax.dynamic_slice_in_dim(w, me, 1, 0)[0]   # (n_pods,)
+            mixed = jnp.tensordot(row.astype(jnp.float32),
+                                  gathered.astype(jnp.float32), axes=1)
+            return mixed[None].astype(x.dtype)
+
+        return shard_map(inner, mesh=mesh,
+                         in_specs=(P(), spec), out_specs=spec,
+                         check_vma=False)(W.astype(jnp.float32), leaf)
+
+    return jax.tree.map(mix_leaf, stacked_params)

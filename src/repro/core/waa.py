@@ -1,0 +1,43 @@
+"""Worker Activation Algorithm (paper Alg. 2).
+
+Sort workers by their estimated round cost H_t^i (local-training remainder +
+slowest in-link transfer, Eqs. 7-8), then scan prefixes of the sorted order;
+for each prefix pre-update staleness and evaluate the drift-plus-penalty
+function (Eq. 34); return the prefix minimizing it.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.staleness import StalenessState, drift_plus_penalty
+
+
+def worker_activation(state: StalenessState, round_cost: np.ndarray, V: float,
+                      max_workers: int | None = None) -> Tuple[np.ndarray, float]:
+    """Returns (active_mask (N,) bool, best drift-plus-penalty score).
+
+    round_cost: H_t^i estimate per worker (Eq. 8).
+    max_workers: optional cap on |A_t| (defaults to N).
+    """
+    n = len(round_cost)
+    order = np.argsort(round_cost, kind="stable")
+    limit = n if max_workers is None else min(max_workers, n)
+
+    best_score = np.inf
+    best_k = 1
+    mask = np.zeros(n, bool)
+    for k in range(1, limit + 1):
+        mask[order[k - 1]] = True
+        # H_t for this candidate set = max over activated workers (Eq. 9);
+        # sorted order makes that the k-th smallest cost.
+        h_t = float(round_cost[order[k - 1]])
+        tau_next = state.previewed_tau(mask)
+        score = drift_plus_penalty(state.queue, tau_next, state.tau_bound, h_t, V)
+        if score < best_score:
+            best_score = score
+            best_k = k
+    active = np.zeros(n, bool)
+    active[order[:best_k]] = True
+    return active, best_score

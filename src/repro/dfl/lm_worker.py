@@ -1,0 +1,115 @@
+"""DFL over the model zoo: workers train real architectures (any registry
+arch) instead of the MLP proxy.
+
+The protocol layer is unchanged — DySTop only needs param pytrees, a local
+step, and byte counts — which is exactly the arch-agnosticism claim of
+DESIGN.md §4, demonstrated end-to-end here.  Worker models are one stacked
+pytree (leading worker axis); local training is a masked vmap of the
+production train step; aggregation reuses ``core.aggregation`` (and therefore
+the Pallas ``aggregate`` kernel).
+
+CPU-budget note: use smoke-geometry configs (``registry.get_smoke_config``)
+for interactive runs; the code path is identical for full configs on real
+hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.synthetic import make_token_stream
+from repro.models import registry as R
+from repro.optim import Optimizer, get_optimizer
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass
+class LMFleet:
+    """N worker replicas of one architecture + their optimizer states."""
+    cfg: ModelConfig
+    stacked_params: Params          # leaves: (N, ...)
+    stacked_opt: Params
+    optimizer: Optimizer
+    n_workers: int
+
+    @property
+    def model_bytes(self) -> int:
+        one = jax.tree.map(lambda l: l[0], self.stacked_params)
+        return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(one))
+
+
+def init_fleet(cfg: ModelConfig, n_workers: int, optimizer: str = "adam",
+               lr: float = 1e-3, seed: int = 0) -> LMFleet:
+    """All workers start from w_0 (paper Thm. 1's shared init)."""
+    opt = get_optimizer(optimizer, lr)
+    params, _ = R.init_params(cfg, jax.random.PRNGKey(seed))
+    opt_state = opt.init(params)
+
+    def stack(tree):
+        return jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (n_workers,) + l.shape).copy(), tree)
+
+    return LMFleet(cfg=cfg, stacked_params=stack(params),
+                   stacked_opt=stack(opt_state), optimizer=opt,
+                   n_workers=n_workers)
+
+
+def worker_streams(cfg: ModelConfig, n_workers: int, batch: int, seq: int,
+                   seed: int = 0, noniid_offset: bool = True
+                   ) -> Iterator[Dict[str, np.ndarray]]:
+    """Per-worker token batches.  Non-IID-ness: each worker samples from a
+    different slice of a long stream (distinct local distributions, the LM
+    analogue of the Dirichlet class skew)."""
+    stream = make_token_stream(cfg.vocab_size, 400_000, seed=seed)
+    n = len(stream) - seq - 1
+    rng = np.random.default_rng(seed)
+    slice_len = n // n_workers if noniid_offset else n
+    while True:
+        tok = np.empty((n_workers, batch, seq), np.int32)
+        lab = np.empty((n_workers, batch, seq), np.int32)
+        for w in range(n_workers):
+            lo = w * slice_len % max(n - slice_len, 1) if noniid_offset else 0
+            starts = rng.integers(lo, lo + max(slice_len - seq - 1, 1), size=batch)
+            for b, s in enumerate(starts):
+                tok[w, b] = stream[s:s + seq]
+                lab[w, b] = stream[s + 1:s + seq + 1]
+        yield {"tokens": tok, "labels": lab,
+               "loss_mask": np.ones((n_workers, batch, seq), np.float32)}
+
+
+def make_fleet_step(fleet: LMFleet):
+    """Masked per-worker train step: only activated workers move."""
+    cfg, opt = fleet.cfg, fleet.optimizer
+
+    def one(params, opt_state, batch, active):
+        def loss_fn(p):
+            return R.compute_loss(cfg, p, batch)
+
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_p, new_s = opt.update(grads, opt_state, params)
+        a = active.astype(jnp.float32)
+
+        def mix(n, o):
+            am = a.astype(n.dtype).reshape((1,) * n.ndim)
+            return n * am + o * (1 - am)
+
+        return (jax.tree.map(mix, new_p, params),
+                jax.tree.map(mix, new_s, opt_state), loss)
+
+    return jax.jit(jax.vmap(one))
+
+
+def fleet_eval(fleet: LMFleet, batch: Dict[str, jnp.ndarray],
+               alpha: jnp.ndarray) -> float:
+    """Loss of the data-size-weighted global model (paper Eq. 11)."""
+    gm = jax.tree.map(lambda l: jnp.tensordot(alpha, l.astype(jnp.float32),
+                                              axes=1).astype(l.dtype),
+                      fleet.stacked_params)
+    loss, _ = R.compute_loss(fleet.cfg, gm, batch)
+    return float(loss)

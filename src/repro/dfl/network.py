@@ -1,0 +1,87 @@
+"""Edge-network model: geometric placement, Shannon-rate wireless links,
+time-varying channel gains, comm ranges (paper section VI-A1).
+
+Defaults follow the paper's simulation setup: 100m x 100m region, path-loss
+constant G0 = -43 dB at 1 m with d^-4 decay, transmit power 10-20 dBm with
+per-worker fluctuation, noise power 1e-13 W, link bandwidth b = 1 MHz.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class NetworkConfig:
+    n_workers: int = 100
+    region_m: float = 100.0
+    comm_range_m: float = 40.0
+    g0_db: float = -43.0
+    tx_power_dbm_lo: float = 10.0
+    tx_power_dbm_hi: float = 20.0
+    noise_w: float = 1e-13
+    bandwidth_hz: float = 1e6
+    gain_fluctuation: float = 0.2     # lognormal sigma on per-round channel
+    dynamics_drop_prob: float = 0.02  # per-round chance a link blinks out
+
+
+class EdgeNetwork:
+    """Positions, distances, per-round link rates (bytes/s)."""
+
+    def __init__(self, cfg: NetworkConfig, rng: np.random.Generator):
+        self.cfg = cfg
+        self.rng = rng
+        n = cfg.n_workers
+        self.pos = rng.uniform(0, cfg.region_m, size=(n, 2))
+        diff = self.pos[:, None, :] - self.pos[None, :, :]
+        self.dist = np.sqrt((diff ** 2).sum(-1)) + 1e-9
+        np.fill_diagonal(self.dist, 0.0)
+        p_dbm = rng.uniform(cfg.tx_power_dbm_lo, cfg.tx_power_dbm_hi, size=n)
+        self.tx_power_w = 10 ** ((p_dbm - 30) / 10)
+
+    def in_range(self) -> np.ndarray:
+        r = (self.dist <= self.cfg.comm_range_m)
+        np.fill_diagonal(r, False)
+        return r
+
+    def link_rates(self, dynamic: bool = True) -> np.ndarray:
+        """Per-round Shannon rates (N, N) in bytes/s for j -> i transfers."""
+        cfg = self.cfg
+        g0 = 10 ** (cfg.g0_db / 10)
+        with np.errstate(divide="ignore"):
+            mean_gain = g0 * np.where(self.dist > 0, self.dist, np.inf) ** -4
+        gain = self.rng.exponential(np.maximum(mean_gain, 1e-30))
+        if dynamic:
+            gain = gain * self.rng.lognormal(0.0, cfg.gain_fluctuation, gain.shape)
+        snr = self.tx_power_w[None, :] * gain / cfg.noise_w
+        rate_bps = cfg.bandwidth_hz * np.log2(1.0 + snr)
+        rate = rate_bps / 8.0
+        if dynamic and cfg.dynamics_drop_prob > 0:
+            # edge dynamics: a blinked-out link degrades to a deep fade (the
+            # transfer stalls and is re-established, ~50x slower effective rate)
+            drop = self.rng.random(rate.shape) < cfg.dynamics_drop_prob
+            rate = np.where(drop, rate * 0.02, rate)
+        np.fill_diagonal(rate, np.inf)
+        return rate
+
+    def expected_link_time(self, model_bytes: float) -> np.ndarray:
+        """Deterministic (mean-gain) transfer-time estimate used by WAA."""
+        cfg = self.cfg
+        g0 = 10 ** (cfg.g0_db / 10)
+        with np.errstate(divide="ignore"):
+            mean_gain = g0 * np.where(self.dist > 0, self.dist, np.inf) ** -4
+        snr = self.tx_power_w[None, :] * mean_gain / cfg.noise_w
+        rate = cfg.bandwidth_hz * np.log2(1.0 + snr) / 8.0
+        with np.errstate(divide="ignore"):
+            t = model_bytes / rate
+        np.fill_diagonal(t, 0.0)
+        return t
+
+
+def heterogeneous_compute_times(n: int, base_s: float, rng: np.random.Generator,
+                                sigma: float = 0.35) -> np.ndarray:
+    """Per-worker local-training time h_i: base batch time x lognormal speed
+    factor (paper: measured batch time x normal coefficient)."""
+    return base_s * rng.lognormal(0.0, sigma, size=n)

@@ -1,0 +1,248 @@
+"""Event-driven ADFL simulator (paper sections III, VI).
+
+Time model:
+  h_t^{i,cmp} = max(h_i - time-since-last-activation, 0)      (Eq. 7)
+  H_t^i       = h^cmp + max over pulled in-links of h^com     (Eq. 8)
+  H_t         = max over activated workers of H_t^i           (Eq. 9)
+Bandwidth:
+  B_t^i = (#in-links + #out-links) * b                        (Eq. 10)
+Communication overhead metric = total model-transfer bytes.
+
+Synchronous mechanisms (MATCHA, GossipFL) pay the FULL local-training time of
+every worker every round (the straggler effect the paper measures).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import apply_mixing, mixing_matrix
+from repro.core.protocol import Mechanism, RoundContext
+from repro.core.staleness import StalenessState
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import (ClassificationData, make_classification,
+                                  train_test_split)
+from repro.dfl import worker as WK
+from repro.dfl.network import EdgeNetwork, NetworkConfig, heterogeneous_compute_times
+
+
+@dataclasses.dataclass
+class SimConfig:
+    n_workers: int = 100
+    n_rounds: int = 300               # round cap
+    max_sim_time: Optional[float] = None   # stop at this simulated wall-clock;
+                                      #   evals then happen on a time grid (the
+                                      #   paper compares mechanisms at equal
+                                      #   TIME — async runs many more rounds)
+    phi: float = 1.0                  # Dirichlet non-IID level (1.0 = IID)
+    tau_bound: int = 5
+    V: float = 10.0
+    batch_size: int = 32
+    local_steps: int = 2
+    lr: float = 0.05
+    hidden: int = 64
+    base_compute_s: float = 1.0
+    compute_sigma: float = 0.75       # lognormal spread of worker speeds: the
+                                      #   paper's testbed spans Jetson Nano ->
+                                      #   Orin (~10x); 0.75 gives p95/p5 ~ 12x
+    bandwidth_budget: float = 8.0     # transfers of size b per worker per round
+    link_timeout_s: float = 5.0       # pull abort/retry ceiling: a faded link
+                                      #   never stalls a round longer than this
+                                      #   (async pulls degrade gracefully)
+    sync_link_timeout_s: float = 30.0 # sync barriers CANNOT abort (the round
+                                      #   needs every member) but do eventually
+                                      #   retransmit once the channel recovers;
+                                      #   this is the stall+retry ceiling
+    model_bytes_scale: float = 25.0   # time/bandwidth accounting prices a
+                                      #   paper-scale CNN (~0.7MB) rather than
+                                      #   the 27KB MLP proxy we can afford to
+                                      #   train on CPU; transfer ~= 1 batch
+                                      #   time over a median link, as in VI-A
+    failure_prob: float = 0.0         # edge dynamics: per-round chance a worker
+                                      #   goes down (unreachable + can't train)
+    failure_persist: float = 0.5      # chance a down worker stays down
+    eval_every: int = 10
+    target_accuracy: Optional[float] = None
+    seed: int = 0
+    use_kernel: bool = False          # Pallas aggregate (interpret on CPU)
+    n_samples: int = 20000
+    dim: int = 32
+
+
+@dataclasses.dataclass
+class History:
+    rounds: List[int] = dataclasses.field(default_factory=list)
+    sim_time: List[float] = dataclasses.field(default_factory=list)
+    comm_gb: List[float] = dataclasses.field(default_factory=list)
+    acc_global: List[float] = dataclasses.field(default_factory=list)
+    acc_local: List[float] = dataclasses.field(default_factory=list)
+    loss_global: List[float] = dataclasses.field(default_factory=list)
+    staleness_avg: List[float] = dataclasses.field(default_factory=list)
+    staleness_max: List[int] = dataclasses.field(default_factory=list)
+    completion_time: Optional[float] = None     # first time target acc reached
+    completion_comm_gb: Optional[float] = None
+    wall_s: float = 0.0
+    round_durations: List[float] = dataclasses.field(default_factory=list)
+    round_active: List[int] = dataclasses.field(default_factory=list)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def run_simulation(mechanism: Mechanism, cfg: SimConfig,
+                   data: Optional[ClassificationData] = None,
+                   test: Optional[ClassificationData] = None,
+                   record_history_for_bound: bool = False) -> History:
+    rng = np.random.default_rng(cfg.seed)
+    t_wall = time.time()
+
+    # --- data ---
+    if data is None:
+        full = make_classification(cfg.n_samples, cfg.dim, seed=cfg.seed)
+        data, test_split = train_test_split(full, 0.2, seed=cfg.seed)
+        test = test or test_split
+    assert test is not None, "pass `test` when supplying `data`"
+    parts, class_counts = dirichlet_partition(data, cfg.n_workers, cfg.phi,
+                                              seed=cfg.seed)
+    data_sizes = np.array([len(p) for p in parts], np.float64)
+    alpha = jnp.asarray(data_sizes / data_sizes.sum(), jnp.float32)
+
+    # --- environment ---
+    net = EdgeNetwork(NetworkConfig(n_workers=cfg.n_workers), rng)
+    in_range = net.in_range()
+    h_i = heterogeneous_compute_times(cfg.n_workers, cfg.base_compute_s, rng,
+                                      sigma=cfg.compute_sigma)
+
+    # --- models ---
+    key = jax.random.PRNGKey(cfg.seed)
+    stacked = WK.init_stacked(key, cfg.n_workers, cfg.dim, cfg.hidden,
+                              data.n_classes)
+    model_bytes = WK.param_bytes(jax.tree.map(lambda l: l[0], stacked)) \
+        * cfg.model_bytes_scale
+    exp_link_time = net.expected_link_time(model_bytes)
+
+    # --- control state ---
+    st = StalenessState.create(cfg.n_workers, cfg.tau_bound)
+    pull_counts = np.zeros((cfg.n_workers, cfg.n_workers), np.float64)
+    time_since_act = np.zeros(cfg.n_workers, np.float64)
+    budget = np.full(cfg.n_workers, cfg.bandwidth_budget, np.float64)
+    x_test = jnp.asarray(test.x)
+    y_test = jnp.asarray(test.y)
+
+    hist = History()
+    bound_log = {"active": [], "W": []} if record_history_for_bound else None
+    sim_clock = 0.0
+    comm_bytes = 0.0
+    down = np.zeros(cfg.n_workers, bool)   # edge dynamics: failed workers
+
+    for t in range(1, cfg.n_rounds + 1):
+        # edge dynamics: workers fail and rejoin (paper's "Edge Dynamic" axis)
+        if cfg.failure_prob > 0:
+            down = ((down & (rng.random(cfg.n_workers) < cfg.failure_persist))
+                    | (~down & (rng.random(cfg.n_workers) < cfg.failure_prob)))
+        up_range = in_range & ~down[None, :] & ~down[:, None]
+
+        # per-round costs (Eq. 7-8 estimate for the coordinator)
+        h_cmp = np.maximum(h_i - time_since_act, 0.0)
+        est_com = np.where(up_range, exp_link_time, 0.0).max(axis=1)
+        round_cost = h_cmp + est_com
+
+        ctx = RoundContext(
+            t=t, round_cost=round_cost, readiness=h_i - time_since_act,
+            in_range=up_range,
+            class_counts=class_counts, phys_dist=net.dist,
+            pull_counts=pull_counts, staleness=st,
+            bandwidth_budget=budget, data_sizes=data_sizes, rng=rng)
+        dec = mechanism.round(ctx)
+        if cfg.failure_prob > 0:
+            # a down worker can neither train nor serve pulls this round
+            dec.active = dec.active & ~down
+            dec.links = dec.links & ~down[None, :] & ~down[:, None]
+
+        # actual round duration with sampled (dynamic) channels
+        raw_link_time = model_bytes / net.link_rates()
+        if dec.synchronous:
+            # a synchronous barrier cannot abort a pull: the aggregation needs
+            # every matched neighbor's model, so deep fades stall the whole
+            # round until retransmission succeeds (the straggler/dynamics cost
+            # the paper measures) — bounded by the stall+retry ceiling
+            link_time = np.minimum(raw_link_time, cfg.sync_link_timeout_s)
+            cmp_part = h_i                                  # full retrain (sync)
+            eligible = np.ones(cfg.n_workers, bool)
+        else:
+            # async pulls degrade gracefully: abort/retry ceiling
+            link_time = np.minimum(raw_link_time, cfg.link_timeout_s)
+            cmp_part = h_cmp
+            eligible = dec.active
+        com_part = np.where(dec.links, link_time, 0.0).max(axis=1)
+        h_t_i = cmp_part + com_part                          # (N,)
+        H_t = float(h_t_i[eligible].max()) if eligible.any() else 0.0
+        sim_clock += H_t
+        hist.round_durations.append(H_t)
+        hist.round_active.append(int(dec.active.sum()))
+
+        # aggregation (Eq. 4) + local update (Eq. 5)
+        W = mixing_matrix(dec.active, dec.links, data_sizes)
+        stacked = apply_mixing(jnp.asarray(W), stacked, use_kernel=cfg.use_kernel)
+        xb, yb = _sample_batches(parts, data, cfg, rng)
+        stacked, _ = WK.local_train(stacked, xb, yb, jnp.asarray(dec.active),
+                                    lr=cfg.lr, local_steps=cfg.local_steps)
+
+        # accounting
+        n_transfers = int(dec.links.sum())
+        comm_bytes += n_transfers * model_bytes
+        pull_counts += dec.links
+        time_since_act += H_t
+        time_since_act[dec.active] = 0.0
+        st.advance(dec.active)
+        if bound_log is not None:
+            bound_log["active"].append(dec.active.copy())
+            bound_log["W"].append(W.copy())
+
+        if cfg.max_sim_time is not None:
+            grid = cfg.max_sim_time / 12.0
+            crossed = int(sim_clock / grid) > int((sim_clock - H_t) / grid)
+            do_eval = crossed or sim_clock >= cfg.max_sim_time or t == cfg.n_rounds
+        else:
+            do_eval = t % cfg.eval_every == 0 or t == cfg.n_rounds
+        if do_eval:
+            accg, lossg = WK.evaluate_global(stacked, alpha, x_test, y_test)
+            accl, _ = WK.evaluate_stacked(stacked, x_test, y_test)
+            hist.rounds.append(t)
+            hist.sim_time.append(sim_clock)
+            hist.comm_gb.append(comm_bytes / 1e9)
+            hist.acc_global.append(float(accg))
+            hist.acc_local.append(float(accl))
+            hist.loss_global.append(float(lossg))
+            hist.staleness_avg.append(float(st.tau.mean()))
+            hist.staleness_max.append(int(st.tau.max()))
+            if (cfg.target_accuracy is not None
+                    and hist.completion_time is None
+                    and float(accg) >= cfg.target_accuracy):
+                hist.completion_time = sim_clock
+                hist.completion_comm_gb = comm_bytes / 1e9
+        if cfg.max_sim_time is not None and sim_clock >= cfg.max_sim_time:
+            break
+
+    hist.wall_s = time.time() - t_wall
+    if bound_log is not None:
+        hist.bound_log = bound_log  # type: ignore[attr-defined]
+    return hist
+
+
+def _sample_batches(parts, data: ClassificationData, cfg: SimConfig,
+                    rng: np.random.Generator):
+    """Per-worker minibatches: (N, local_steps, batch, dim) / (N, steps, batch)."""
+    n = cfg.n_workers
+    xb = np.empty((n, cfg.local_steps, cfg.batch_size, data.x.shape[1]), np.float32)
+    yb = np.empty((n, cfg.local_steps, cfg.batch_size), np.int32)
+    for i in range(n):
+        idx = rng.choice(parts[i], size=(cfg.local_steps, cfg.batch_size))
+        xb[i] = data.x[idx]
+        yb[i] = data.y[idx]
+    return jnp.asarray(xb), jnp.asarray(yb)

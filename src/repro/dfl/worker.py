@@ -1,0 +1,106 @@
+"""Worker-side model + stacked-worker training ops for the DFL simulation.
+
+The simulation plane trains an MLP classifier (the offline stand-in for the
+paper's CNN/ResNet) but any ``repro.models`` architecture can be plugged in —
+the protocol only needs a param pytree and a local-step function.  All N
+worker replicas live in one stacked pytree (leading worker axis) and local
+SGD for the activated subset is a masked vmap.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def init_mlp(key, dim: int, hidden: int, n_classes: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": jax.random.normal(k1, (dim, hidden), jnp.float32) * dim ** -0.5,
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": jax.random.normal(k2, (hidden, hidden), jnp.float32) * hidden ** -0.5,
+        "b2": jnp.zeros((hidden,), jnp.float32),
+        "w3": jax.random.normal(k3, (hidden, n_classes), jnp.float32) * hidden ** -0.5,
+        "b3": jnp.zeros((n_classes,), jnp.float32),
+    }
+
+
+def mlp_logits(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.relu(x @ p["w1"] + p["b1"])
+    h = jax.nn.relu(h @ p["w2"] + p["b2"])
+    return h @ p["w3"] + p["b3"]
+
+
+def mlp_loss(p: Params, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    logits = mlp_logits(p, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+
+def init_stacked(key, n_workers: int, dim: int, hidden: int, n_classes: int,
+                 same_init: bool = True) -> Params:
+    """All workers start from w_0 (paper Thm. 1 assumes shared init)."""
+    if same_init:
+        p = init_mlp(key, dim, hidden, n_classes)
+        return jax.tree.map(lambda t: jnp.broadcast_to(t[None], (n_workers,) + t.shape).copy(), p)
+    keys = jax.random.split(key, n_workers)
+    return jax.vmap(lambda k: init_mlp(k, dim, hidden, n_classes))(keys)
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "local_steps"))
+def local_train(stacked: Params, xb: jnp.ndarray, yb: jnp.ndarray,
+                active: jnp.ndarray, lr: float = 0.05,
+                local_steps: int = 1) -> Tuple[Params, jnp.ndarray]:
+    """Masked per-worker SGD (paper Eq. 5).
+
+    xb: (N, steps, batch, dim); yb: (N, steps, batch); active: (N,) bool.
+    Only activated workers move; returns (new stacked params, per-worker loss).
+    """
+    def per_worker(p, x_steps, y_steps, a):
+        def one_step(pp, xy):
+            x, y = xy
+            loss, g = jax.value_and_grad(mlp_loss)(pp, x, y)
+            pp = jax.tree.map(lambda w, gw: w - lr * a * gw, pp, g)
+            return pp, loss
+
+        p, losses = jax.lax.scan(one_step, p, (x_steps, y_steps))
+        return p, losses.mean()
+
+    return jax.vmap(per_worker)(stacked, xb, yb,
+                                active.astype(jnp.float32))
+
+
+@jax.jit
+def evaluate_stacked(stacked: Params, x: jnp.ndarray, y: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean test accuracy + loss across workers' local models."""
+    def one(p):
+        logits = mlp_logits(p, x)
+        acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+        logp = jax.nn.log_softmax(logits, -1)
+        loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], -1))
+        return acc, loss
+
+    accs, losses = jax.vmap(one)(stacked)
+    return accs.mean(), losses.mean()
+
+
+@jax.jit
+def evaluate_global(stacked: Params, alpha: jnp.ndarray, x: jnp.ndarray,
+                    y: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Eval the data-size-weighted global model w_t (paper Eq. 11)."""
+    gm = jax.tree.map(lambda t: jnp.tensordot(alpha, t, axes=1), stacked)
+    logits = mlp_logits(gm, x)
+    acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+    logp = jax.nn.log_softmax(logits, -1)
+    loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], -1))
+    return acc, loss
+
+
+def param_bytes(params: Params) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(params))

@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: staleness-weighted model aggregation (paper Eq. 4).
+
+The DFL simulation's per-round hot spot is ``Y = W @ X`` where ``W`` is the
+(N_workers x N_workers) row-stochastic mixing matrix and ``X`` stacks all
+worker models as (N_workers, P) flat parameters — P is tens of millions while
+N is ~100, so this is a skinny matmul that XLA handles poorly when fused into
+the surrounding pytree traffic.
+
+TPU-native tiling: W is tiny and lives in VMEM whole; X/Y stream through VMEM
+in (N, p_blk) column panels with p_blk a multiple of 128 lanes so the MXU sees
+aligned (N x N) @ (N x p_blk) tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _aggregate_kernel(w_ref, x_ref, o_ref):
+    o_ref[...] = jnp.dot(w_ref[...], x_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("p_blk", "interpret"))
+def aggregate(W: jnp.ndarray, X: jnp.ndarray, p_blk: int = 512,
+              interpret: bool = True) -> jnp.ndarray:
+    """Y = W @ X.  W: (N, N) f32; X: (N, P) f32 -> (N, P) f32."""
+    n, p = X.shape
+    assert W.shape == (n, n), (W.shape, X.shape)
+    pad = (-p) % p_blk
+    if pad:
+        X = jnp.pad(X, ((0, 0), (0, pad)))
+    padded_p = p + pad
+    grid = (padded_p // p_blk,)
+    out = pl.pallas_call(
+        _aggregate_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, n), lambda i: (0, 0)),          # W resident
+            pl.BlockSpec((n, p_blk), lambda i: (0, i)),      # X panel
+        ],
+        out_specs=pl.BlockSpec((n, p_blk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, padded_p), jnp.float32),
+        interpret=interpret,
+    )(W.astype(jnp.float32), X.astype(jnp.float32))
+    return out[:, :p]

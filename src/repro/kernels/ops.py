@@ -1,0 +1,45 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively; on the CPU container they execute in
+``interpret=True`` mode (the kernel body runs step-by-step with the same
+block schedule), which is how all correctness tests validate them.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import aggregate as _agg
+from repro.kernels import flash_attention as _fa
+from repro.kernels import moe_router as _mr
+from repro.kernels import ssd_chunk as _sc
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def aggregate(W: jnp.ndarray, X: jnp.ndarray, p_blk: int = 512) -> jnp.ndarray:
+    """Y = W @ X (mixing-matrix model aggregation, paper Eq. 4)."""
+    return _agg.aggregate(W, X, p_blk=p_blk, interpret=_interpret())
+
+
+def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None, blk_q: int = 128,
+                    blk_k: int = 128) -> jnp.ndarray:
+    """Blockwise attention (B, H, S, D); kv heads pre-broadcast for GQA."""
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, blk_q=blk_q, blk_k=blk_k,
+                               interpret=_interpret())
+
+
+def moe_router(logits, top_k: int, blk_t: int = 256):
+    """Fused softmax -> top-k -> renormalize."""
+    return _mr.moe_router(logits, top_k, blk_t=blk_t, interpret=_interpret())
+
+
+def ssd_chunk(Bc, Cc, cum_la, xbar):
+    """Fused Mamba-2 intra-chunk dual form (scores stay in VMEM)."""
+    return _sc.ssd_chunk(Bc, Cc, cum_la, xbar, interpret=_interpret())

@@ -1,0 +1,178 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+compute  = HLO_FLOPs / peak_FLOPs            (per chip — SPMD module is the
+memory   = HLO_bytes / HBM_bw                 per-device program)
+collective = collective_bytes / ICI_bw
+
+``cost_analysis`` supplies flops + bytes accessed; collective bytes are NOT in
+cost_analysis, so we parse the post-SPMD HLO text and sum the result-shape
+bytes of every collective op (all-gather counts its gathered output, which is
+the amount that crosses links in a ring implementation; all-reduce counts ~2x
+its operand in a ring — we report raw operand bytes and note the convention).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes summed over the module."""
+    out: Dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        out[kind] = out.get(kind, 0) + shape_bytes(type_str)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def collective_counts(hlo_text: str) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        kind = m.group(2)
+        out[kind] = out.get(kind, 0) + 1
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    mode: str
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collectives: Dict[str, int]
+    peak_memory_per_device: Optional[float]
+    model_flops: float                      # 6*N*D (or 6*N_active*D for MoE)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs summed over devices)."""
+        total_hlo = self.flops_per_device * self._n_chips()
+        return self.model_flops / total_hlo if total_hlo else float("nan")
+
+    def _n_chips(self) -> int:
+        return 512 if self.mesh == "multi" else 256
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "mode": self.mode,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "collectives": self.collectives,
+            "collective_bytes_by_kind": getattr(self, "coll_by_kind", None),
+            "peak_memory_per_device": self.peak_memory_per_device,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6*N*D for training, 2*N*D for forward-only, per the standard rule.
+    N = active params (MoE counts routed top-k + shared only)."""
+    n_active = cfg.active_param_count()
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch * 1
+    return 2.0 * n_active * tokens
+
+
+def extract_roofline(cfg, shape, mesh_name: str, mode: str, compiled,
+                     hlo_text: str, corrections: Optional[dict] = None) -> Roofline:
+    """corrections: output of loopcost.loop_corrections — restores scan trip
+    counts on top of XLA's count-each-loop-body-once accounting."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byt = float(cost.get("bytes accessed", cost.get("bytes_accessed", 0.0)))
+    counts = collective_counts(hlo_text)
+    if corrections:
+        from repro.launch.loopcost import (collective_bytes_with_loops,
+                                           hlo_bytes_multiplier)
+        flops *= corrections.get("flops_mult", 1.0)
+        # bytes multiplier from the post-fusion HLO itself (the jaxpr-level
+        # ratio overweights unfused elementwise temporaries)
+        bmult = hlo_bytes_multiplier(hlo_text)
+        corrections["bytes_mult_hlo"] = bmult
+        byt *= bmult
+        coll = collective_bytes_with_loops(hlo_text)
+        if not coll:
+            coll = collective_bytes(hlo_text)
+    else:
+        coll = collective_bytes(hlo_text)
+    try:
+        mem = compiled.memory_analysis()
+        peak = float(getattr(mem, "temp_size_in_bytes", 0)
+                     + getattr(mem, "argument_size_in_bytes", 0)
+                     + getattr(mem, "output_size_in_bytes", 0)
+                     - getattr(mem, "alias_size_in_bytes", 0))
+    except Exception:
+        peak = None
+    roof = Roofline(
+        arch=cfg.arch_id, shape=shape.name, mesh=mesh_name, mode=mode,
+        flops_per_device=flops, bytes_per_device=byt,
+        collective_bytes_per_device=float(coll.get("total", 0)),
+        collectives=counts, peak_memory_per_device=peak,
+        model_flops=model_flops_estimate(cfg, shape),
+    )
+    roof.coll_by_kind = {k: float(v) for k, v in coll.items()}
+    return roof

@@ -1,0 +1,174 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape) pair this lowers + compiles the right
+step function (train_step for train_4k, forward for prefill_32k, serve_step
+for decode shapes) on the single-pod 16x16=256 mesh and the multi-pod
+2x16x16=512 mesh, prints memory/cost analysis, parses collective bytes out of
+the post-SPMD HLO, and writes one JSON per combo under experiments/dryrun/.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import INPUT_SHAPES
+from repro.launch import analysis as A
+from repro.launch import steps as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry as R
+from repro.optim import get_optimizer
+from repro.sharding.rules import use_sharding_rules
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _nullctx():
+    import contextlib
+    return contextlib.nullcontext()
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, optimizer_name: str = "adam",
+            rule_overrides=None, tag: str = "", verbose: bool = True,
+            paper_mode: bool = False, attn_impl: str = None,
+            paper_ctx: bool = True, local_steps: int = 1):
+    import dataclasses
+    cfg = R.get_config(arch)
+    if attn_impl:
+        cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
+    shape = INPUT_SHAPES[shape_name]
+    if shape_name == "long_500k" and not R.long_context_capable(cfg):
+        return {"arch": arch, "shape": shape_name, "skipped": "no sub-quadratic path"}
+    if paper_mode:
+        multi_pod = True               # the DFL plane needs the pod axis
+        # inside the pod-vmap the interior batch must not claim the pod axis
+        rule_overrides = {**(rule_overrides or {}), "data": ("data",)}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "multi" if multi_pod else "single"
+
+    if paper_mode:
+        opt = get_optimizer(optimizer_name)
+        art = S.build_dystop_artifacts(cfg, shape, mesh, opt, remat=True,
+                                       local_steps=local_steps)
+        mode = "dystop_round"
+    elif shape.mode == "train":
+        opt = get_optimizer(optimizer_name)
+        art = S.build_train_artifacts(cfg, shape, mesh, opt, remat=True,
+                                      rule_overrides=rule_overrides)
+        mode = "train"
+    elif shape.mode == "prefill":
+        art = S.build_prefill_artifacts(cfg, shape, mesh, rule_overrides=rule_overrides)
+        mode = "prefill"
+    else:
+        art = S.build_serve_artifacts(cfg, shape, mesh, rule_overrides=rule_overrides)
+        mode = "serve"
+
+    t0 = time.time()
+    # paper mode vmaps the model over the pod axis: the interior constrain()
+    # calls would see batched ranks, so the sharding ctx stays off (in/out
+    # shardings fully specify the layout).
+    # paper mode default: the rules ctx DOES work under the pod-vmap (batch
+    # tracers expose unbatched avals), and it's a large win — see §Perf H3.
+    use_ctx = (not paper_mode) or paper_ctx
+    ctx = use_sharding_rules(mesh, rule_overrides) if use_ctx else _nullctx()
+    with mesh, ctx:
+        jitted = jax.jit(art.step_fn, in_shardings=art.in_shardings,
+                         out_shardings=art.out_shardings)
+        lowered = jitted.lower(*art.abstract_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    try:
+        hlo_text = compiled.as_text()
+    except Exception:
+        hlo_text = lowered.as_text()
+    mem = compiled.memory_analysis()
+    # XLA counts loop bodies once; restore scan trip counts (see loopcost.py)
+    from repro.launch import loopcost as LC
+    try:
+        corrections = LC.loop_corrections(art.step_fn, *art.abstract_args)
+    except Exception as e:
+        print(f"  (loop-correction trace failed: {e!r}; raw XLA counts)")
+        corrections = None
+    roof = A.extract_roofline(cfg, shape, mesh_name, mode, compiled, hlo_text,
+                              corrections)
+    rec = roof.to_dict()
+    if corrections:
+        rec["loop_corrections"] = {k: round(v, 4) if isinstance(v, float) else v
+                                   for k, v in corrections.items()}
+    rec["lower_s"] = round(t_lower, 1)
+    rec["compile_s"] = round(t_compile, 1)
+    rec["optimizer"] = optimizer_name if mode == "train" else None
+    rec["memory_analysis"] = str(mem)
+
+    if verbose:
+        print(f"--- {arch} x {shape_name} x {mesh_name} ({mode}) ---")
+        print(f"memory_analysis: {mem}")
+        print(f"cost_analysis: flops/dev={rec['flops_per_device']:.3e} "
+              f"bytes/dev={rec['bytes_per_device']:.3e}")
+        print(f"collectives: {rec['collectives']} "
+              f"bytes/dev={rec['collective_bytes_per_device']:.3e}")
+        print(f"roofline: t_comp={rec['t_compute']*1e3:.2f}ms "
+              f"t_mem={rec['t_memory']*1e3:.2f}ms "
+              f"t_coll={rec['t_collective']*1e3:.2f}ms "
+              f"bottleneck={rec['bottleneck']} "
+              f"useful_flops={rec['useful_flops_ratio']:.3f}")
+        print(f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    fn = OUT_DIR / f"{arch}_{shape_name}_{mesh_name}{suffix}.json"
+    fn.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=R.ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--optimizer", default="adam")
+    ap.add_argument("--paper-mode", action="store_true",
+                    help="lower the pods-as-workers DySTop round step "
+                         "(train + staleness-weighted pod aggregation)")
+    args = ap.parse_args()
+
+    archs = R.ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                try:
+                    rec = run_one(arch, shape_name, multi, args.optimizer,
+                                  paper_mode=args.paper_mode,
+                                  tag="dystop" if args.paper_mode else "")
+                    if rec.get("skipped"):
+                        print(f"SKIP {arch} x {shape_name}: {rec['skipped']}")
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((arch, shape_name, multi, repr(e)))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        sys.exit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

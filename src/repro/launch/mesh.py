@@ -1,0 +1,29 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not module-level state) so importing
+this module never touches jax device initialization.  The single-pod mesh is
+16x16 = 256 v5e chips (data, model); the multi-pod mesh adds a leading ``pod``
+axis (2 pods = 512 chips).  In the DySTop mapping the ``pod`` axis doubles as
+the decentralized-FL worker axis (each pod holds one DFL replica).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke runs (shardings become no-ops)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# TPU v5e hardware constants used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+CHIPS_PER_POD = 256

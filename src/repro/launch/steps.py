@@ -1,0 +1,283 @@
+"""jit-able train / serve steps + the sharding plumbing for both.
+
+``build_train_artifacts`` / ``build_serve_artifacts`` return everything the
+dry-run, trainer and benchmarks need: the step fn, abstract inputs, and
+NamedShardings derived from the logical-axes trees in the model zoo.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import registry as R
+from repro.optim import Optimizer
+from repro.sharding import rules as SR
+
+# --------------------------------------------------------------------------- #
+# step functions
+# --------------------------------------------------------------------------- #
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, remat: bool = True):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return R.compute_loss(cfg, p, batch, remat=remat)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params, new_state = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)))
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_dystop_round_step(cfg: ModelConfig, optimizer: Optimizer, mesh,
+                           remat: bool = True, local_steps: int = 1):
+    """One full DySTop round on the pods-as-workers plane (paper Alg. 1 with
+    pods as workers): every pod runs its OWN local train step on its OWN data
+    (params carry a leading pod axis, sharded over `pod` — no gradient sync
+    across pods), then the staleness-weighted pull-aggregate mixes replicas
+    over the `pod` axis.  `mix_w` is the (n_pods x n_pods) row-stochastic
+    matrix the host-side coordinator (WAA+PTCA) produced for this round."""
+    from repro.core.protocol import dystop_pod_mix
+
+    base_step = make_train_step(cfg, optimizer, remat=remat)
+
+    def local_phase(params, opt_state, batches):
+        """`local_steps` train steps between aggregations (batches leaves
+        carry a leading local-step axis)."""
+        if local_steps == 1:
+            b = jax.tree.map(lambda x: x[0], batches)
+            return base_step(params, opt_state, b)
+
+        def body(carry, b):
+            p, s, _ = carry
+            p, s, m = base_step(p, s, b)
+            return (p, s, m), None
+
+        m0 = {k: jnp.zeros((), jnp.float32)
+              for k in ("ce", "moe_aux", "loss", "grad_norm")}
+        (p, s, m), _ = jax.lax.scan(body, (params, opt_state, m0), batches)
+        return p, s, m
+
+    def round_step(params, opt_state, batch, mix_w):
+        new_params, new_state, metrics = jax.vmap(local_phase)(params, opt_state, batch)
+        new_params = dystop_pod_mix(new_params, mix_w, mesh)
+        metrics = jax.tree.map(jnp.mean, metrics)
+        return new_params, new_state, metrics
+
+    return round_step
+
+
+def build_dystop_artifacts(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                           optimizer: Optimizer, remat: bool = True,
+                           local_steps: int = 1) -> "TrainArtifacts":
+    """Abstract inputs + shardings for the pods-as-workers round step.
+
+    Stacked representation: every params/opt leaf gets a leading n_pods axis
+    sharded over `pod`; the per-pod interior keeps the fsdp/tensor layout.
+    The global batch is split across pods (each pod = one DFL worker with its
+    own data shard, exactly the paper's data model)."""
+    n_pods = mesh.shape["pod"]
+    rules = dict(SR.DEFAULT_RULES)
+    rules["data"] = ("data",)          # `pod` is taken by the replica axis
+
+    params_sds, param_axes = R.abstract_params(cfg)
+    opt_sds = jax.eval_shape(optimizer.init, params_sds)
+    opt_axes = optimizer.state_axes(param_axes)
+    batch_sds = R.batch_specs(cfg, shape)
+    batch_axes = R.batch_logical_axes(cfg, shape)
+
+    def stack_sds(s):
+        return jax.ShapeDtypeStruct((n_pods,) + s.shape, s.dtype)
+
+    def stack_batch_sds(s):
+        assert s.shape[0] % n_pods == 0, "global batch must split across pods"
+        return jax.ShapeDtypeStruct(
+            (n_pods, local_steps, s.shape[0] // n_pods) + s.shape[1:], s.dtype)
+
+    def shard(ax_tree, sds_tree, skip_dims=1):
+        def one(ax, s):
+            inner = SR.logical_spec(ax, s.shape[skip_dims:], mesh, rules)
+            return NamedSharding(mesh, P("pod", *([None] * (skip_dims - 1)), *inner))
+        return jax.tree.map(one, ax_tree, sds_tree, is_leaf=_tuple_leaf)
+
+    sp = jax.tree.map(stack_sds, params_sds)
+    so = jax.tree.map(stack_sds, opt_sds)
+    sb = jax.tree.map(stack_batch_sds, batch_sds)
+    mix_sds = jax.ShapeDtypeStruct((n_pods, n_pods), jnp.float32)
+
+    params_sh = shard(param_axes, sp)
+    opt_sh = shard(opt_axes, so)
+    batch_sh = shard(batch_axes, sb, skip_dims=2)   # (pod, local_step, ...)
+    mix_sh = NamedSharding(mesh, P())
+    metrics_sh = NamedSharding(mesh, P())
+    metrics_keys = ("ce", "moe_aux", "loss", "grad_norm")
+
+    return TrainArtifacts(
+        step_fn=make_dystop_round_step(cfg, optimizer, mesh, remat=remat,
+                                       local_steps=local_steps),
+        abstract_args=(sp, so, sb, mix_sds),
+        in_shardings=(params_sh, opt_sh, batch_sh, mix_sh),
+        out_shardings=(params_sh, opt_sh, {k: metrics_sh for k in metrics_keys}),
+    )
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return R.forward_logits(cfg, params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, token):
+        return R.serve_step(cfg, params, cache, token)
+
+    return serve_step
+
+
+# --------------------------------------------------------------------------- #
+# sharding construction
+# --------------------------------------------------------------------------- #
+
+
+def _tuple_leaf(t):
+    return isinstance(t, tuple) and all(isinstance(a, (str, type(None))) for a in t)
+
+
+def shardings_from_axes(axes_tree, shapes_tree, mesh: Mesh):
+    def one(ax, sds):
+        return NamedSharding(mesh, SR.logical_spec(ax, sds.shape, mesh))
+
+    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=_tuple_leaf)
+
+
+def cache_logical_axes(cfg: ModelConfig, cache_shapes) -> Any:
+    """Assign logical axes to every decode-cache leaf by (path, ndim)."""
+    def one(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = entry.key
+                break
+        nd = leaf.ndim
+        if name == "pos":
+            return ()
+        if name in ("k", "v"):          # (stack*, B, W, K, hd)
+            return ("stack",) * (nd - 4) + ("data", "seq_act", "kv_heads", None)
+        if name == "k_pos":             # (stack*, B, W)
+            return ("stack",) * (nd - 2) + ("data", "seq_act")
+        if name == "state":             # (stack*, B, H, P, N)
+            return ("stack",) * (nd - 4) + ("data", "ssm_inner", None, None)
+        if name == "conv_tail":         # (stack*, B, W-1, C)
+            return ("stack",) * (nd - 3) + ("data", None, "ssm_inner")
+        if name == "h":                 # (stack*, B, dr)
+            return ("stack",) * (nd - 2) + ("data", "rnn_width")
+        return (None,) * nd
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+@dataclasses.dataclass
+class TrainArtifacts:
+    step_fn: Any
+    abstract_args: Tuple[Any, ...]     # (params, opt_state, batch) SDS trees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Tuple[Any, ...]
+
+
+def build_train_artifacts(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                          optimizer: Optimizer, remat: bool = True,
+                          rule_overrides: Optional[dict] = None) -> TrainArtifacts:
+    params_sds, param_axes = R.abstract_params(cfg)
+    opt_sds = jax.eval_shape(optimizer.init, params_sds)
+    opt_axes = optimizer.state_axes(param_axes)
+    batch_sds = R.batch_specs(cfg, shape)
+    batch_axes = R.batch_logical_axes(cfg, shape)
+
+    rules = dict(SR.DEFAULT_RULES)
+    if rule_overrides:
+        rules.update(rule_overrides)
+
+    def shard(ax_tree, sds_tree):
+        return jax.tree.map(
+            lambda ax, s: NamedSharding(mesh, SR.logical_spec(ax, s.shape, mesh, rules)),
+            ax_tree, sds_tree, is_leaf=_tuple_leaf)
+
+    params_sh = shard(param_axes, params_sds)
+    opt_sh = shard(opt_axes, opt_sds)
+    batch_sh = shard(batch_axes, batch_sds)
+    metrics_sh = NamedSharding(mesh, P())
+
+    step = make_train_step(cfg, optimizer, remat=remat)
+    metrics_sds = {k: jax.ShapeDtypeStruct((), jnp.float32)
+                   for k in ("ce", "moe_aux", "loss", "grad_norm")}
+    return TrainArtifacts(
+        step_fn=step,
+        abstract_args=(params_sds, opt_sds, batch_sds),
+        in_shardings=(params_sh, opt_sh, batch_sh),
+        out_shardings=(params_sh, opt_sh,
+                       jax.tree.map(lambda _: metrics_sh, metrics_sds)),
+    )
+
+
+def build_prefill_artifacts(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                            rule_overrides: Optional[dict] = None) -> TrainArtifacts:
+    params_sds, param_axes = R.abstract_params(cfg)
+    batch_sds = R.batch_specs(cfg, shape)
+    batch_axes = R.batch_logical_axes(cfg, shape)
+    rules = dict(SR.DEFAULT_RULES)
+    if rule_overrides:
+        rules.update(rule_overrides)
+
+    def shard(ax_tree, sds_tree):
+        return jax.tree.map(
+            lambda ax, s: NamedSharding(mesh, SR.logical_spec(ax, s.shape, mesh, rules)),
+            ax_tree, sds_tree, is_leaf=_tuple_leaf)
+
+    logits_sh = NamedSharding(mesh, SR.logical_spec(
+        ("data", None, "vocab_act"), (shape.global_batch, shape.seq_len, 1 << 30), mesh, rules))
+    return TrainArtifacts(
+        step_fn=make_prefill_step(cfg),
+        abstract_args=(params_sds, batch_sds),
+        in_shardings=(shard(param_axes, params_sds), shard(batch_axes, batch_sds)),
+        out_shardings=logits_sh,
+    )
+
+
+def build_serve_artifacts(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                          rule_overrides: Optional[dict] = None) -> TrainArtifacts:
+    params_sds, param_axes = R.abstract_params(cfg)
+    cache_sds = R.abstract_decode_cache(cfg, shape)
+    cache_axes = cache_logical_axes(cfg, cache_sds)
+    token_sds = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    rules = dict(SR.DEFAULT_RULES)
+    if rule_overrides:
+        rules.update(rule_overrides)
+
+    def shard(ax_tree, sds_tree):
+        return jax.tree.map(
+            lambda ax, s: NamedSharding(mesh, SR.logical_spec(ax, s.shape, mesh, rules)),
+            ax_tree, sds_tree, is_leaf=_tuple_leaf)
+
+    params_sh = shard(param_axes, params_sds)
+    cache_sh = shard(cache_axes, cache_sds)
+    token_sh = NamedSharding(mesh, SR.logical_spec(
+        ("data", None), token_sds.shape, mesh, rules))
+    logits_sh = NamedSharding(mesh, SR.logical_spec(
+        ("data", None, "vocab_act"), (shape.global_batch, 1, 1 << 30), mesh, rules))
+    return TrainArtifacts(
+        step_fn=make_serve_step(cfg),
+        abstract_args=(params_sds, cache_sds, token_sds),
+        in_shardings=(params_sh, cache_sh, token_sh),
+        out_shardings=(logits_sh, cache_sh),
+    )

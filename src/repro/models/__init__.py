@@ -1,0 +1,3 @@
+from repro.models import registry
+
+__all__ = ["registry"]

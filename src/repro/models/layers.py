@@ -1,0 +1,327 @@
+"""Common neural-net building blocks (pure functional JAX).
+
+Conventions
+-----------
+* Params are plain nested dicts of ``jnp.ndarray``; every init fn takes a PRNG
+  key and returns (params, logical_axes) where logical_axes mirrors the param
+  tree with tuples of logical axis names (see ``repro.sharding.rules``).
+* Activations default to bfloat16; softmax/norm statistics in float32.
+* Shapes: tokens (B, S); hidden (B, S, D); attention heads (B, S, H, hd).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.rules import constrain
+
+Params = Dict[str, Any]
+
+# --------------------------------------------------------------------------- #
+# init helpers
+# --------------------------------------------------------------------------- #
+
+
+def _dense_init(key, shape, in_axis_size, dtype):
+    scale = in_axis_size ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_embedding(key, cfg: ModelConfig):
+    p = {"table": _dense_init(key, (padded_vocab(cfg), cfg.d_model), cfg.d_model,
+                              jnp.dtype(cfg.dtype))}
+    ax = {"table": ("vocab", "embed")}
+    return p, ax
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    """Vocab rounded up to a multiple of 256 so it shards cleanly on any mesh."""
+    return ((cfg.vocab_size + 255) // 256) * 256
+
+
+# --------------------------------------------------------------------------- #
+# normalization
+# --------------------------------------------------------------------------- #
+
+
+def init_rmsnorm(cfg: ModelConfig):
+    return jnp.zeros((cfg.d_model,), jnp.float32), ("embed",)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + scale)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# rotary position embedding
+# --------------------------------------------------------------------------- #
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# attention
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    """Per-layer attention behaviour."""
+    causal: bool = True
+    window: Optional[int] = None            # sliding window (None = full)
+    softcap: Optional[float] = None
+    prefix_len: int = 0                     # bidirectional prefix (prefix-LM)
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "wq": _dense_init(kq, (d, cfg.n_heads, hd), d, dt),
+        "wk": _dense_init(kk, (d, cfg.n_kv_heads, hd), d, dt),
+        "wv": _dense_init(kv, (d, cfg.n_kv_heads, hd), d, dt),
+        "wo": _dense_init(ko, (cfg.n_heads, hd, d), cfg.n_heads * hd, dt),
+    }
+    ax = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    return p, ax
+
+
+def _attn_mask(q_pos, k_pos, spec: AttnSpec):
+    """Boolean mask (..., Sq, Sk); True = attend.
+
+    Batch-free inputs (1-D position vectors) keep the materialized mask at
+    (Sq, Sk) — with batched positions XLA hoists a (B, n, Sq, g, Sk) boolean
+    out of the layer loop, which is a multi-GB loop-invariant on long
+    sequences.  Callers pass 1-D iota for the packed train/prefill path."""
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    if spec.causal:
+        mask = k <= q
+        if spec.prefix_len:
+            # bidirectional among the prefix tokens
+            both_prefix = (q < spec.prefix_len) & (k < spec.prefix_len)
+            mask = mask | both_prefix
+    else:
+        mask = jnp.ones_like(k <= q)
+    if spec.window is not None:
+        mask = mask & ((q - k) < spec.window)
+    return mask
+
+
+def multihead_attention(
+    cfg: ModelConfig,
+    p: Params,
+    x: jnp.ndarray,
+    spec: AttnSpec,
+    positions: jnp.ndarray,
+    kv_x: Optional[jnp.ndarray] = None,
+    kv_positions: Optional[jnp.ndarray] = None,
+    cache: Optional[Params] = None,
+    cache_pos: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """GQA attention.  If `cache` is given, runs one decode step:
+    x is (B, 1, D), k/v are written at `cache_pos` and attention spans the
+    whole cache with position masking.
+    """
+    hd = cfg.resolved_head_dim
+    kv_src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q = apply_rope(q, positions, cfg.rope_theta) if kv_x is None else q
+    # 'q_seq' is replicated by default; the perf harness overrides it to
+    # ('model',) for context-parallel attention when heads don't shard
+    q = constrain(q, ("data", "q_seq", "heads", None))
+
+    if cache is not None and kv_x is None:
+        # self-attention decode step: append to rolling cache
+        k_new = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"])
+        v_new = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"])
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
+        new_cache = {"k": k, "v": v}
+        k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)[None, :]
+        valid = k_pos <= cache_pos
+        mask = _attn_mask(positions, jnp.broadcast_to(k_pos, (x.shape[0], k.shape[1])), spec)
+        mask = mask & valid[:, None, :]
+        mask = mask[:, None, :, None, :]
+    elif cache is not None:
+        # cross-attention decode: cached encoder k/v, no update
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+        mask = None
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"])
+        if kv_x is None:
+            k = apply_rope(k, positions, cfg.rope_theta)
+            # batch-free (Sq, Sk) mask: packed sequences always start at 0, so
+            # 1-D iota positions suffice and the materialized mask stays tiny
+            q1 = jnp.arange(x.shape[1], dtype=jnp.int32)
+            k1 = jnp.arange(kv_src.shape[1], dtype=jnp.int32)
+            mask = _attn_mask(q1, k1, spec)[None, None, :, None, :]
+        else:
+            mask = None  # cross attention: attend everywhere
+        new_cache = None
+
+    # grouped-query: fold q heads into (kv_heads, group)
+    B, Sq = q.shape[0], q.shape[1]
+    G = cfg.q_per_kv
+    qg = q.reshape(B, Sq, cfg.n_kv_heads, G, hd)
+    if cfg.attn_impl == "chunked" and cache is None and kv_x is None:
+        out = _chunked_attention(cfg, qg, k, v, spec)
+    else:
+        scores = jnp.einsum("bsngk,btnk->bnsgt", qg, k).astype(jnp.float32)
+        scores = scores * (hd ** -0.5)
+        if spec.softcap is not None:
+            scores = jnp.tanh(scores / spec.softcap) * spec.softcap
+        if mask is not None:
+            scores = jnp.where(mask, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bnsgt,btnk->bsngk", probs, v)
+    out = out.reshape(B, Sq, cfg.n_heads, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return constrain(y, ("data", None, "embed_act")), new_cache
+
+
+def _chunked_attention(cfg: ModelConfig, qg: jnp.ndarray, k: jnp.ndarray,
+                       v: jnp.ndarray, spec: AttnSpec) -> jnp.ndarray:
+    """Online-softmax attention, scanning kv blocks (the pure-JAX analogue of
+    kernels/flash_attention.py — same math as its ref oracle).
+
+    Never materializes the (Sq, Sk) score matrix in HBM: per kv block the
+    scores live only inside the scan body, cutting the memory roofline term
+    by ~Sk/blk on long sequences.  Self-attention train/prefill path only.
+    """
+    B, Sq, n, G, hd = qg.shape
+    Sk = k.shape[1]
+    blk = min(cfg.attn_chunk, Sk)
+    pad = (-Sk) % blk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nblk = (Sk + pad) // blk
+    scale = hd ** -0.5
+
+    qf = (qg.astype(jnp.float32) * scale)
+    kb = jnp.moveaxis(k.reshape(B, nblk, blk, n, hd), 1, 0)     # (nblk,B,blk,n,hd)
+    vb = jnp.moveaxis(v.reshape(B, nblk, blk, n, hd), 1, 0)
+    rows = jnp.arange(Sq, dtype=jnp.int32)
+
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        kblk, vblk, start = inp
+        s = jnp.einsum("bsngk,btnk->bnsgt", qf, kblk.astype(jnp.float32))
+        if spec.softcap is not None:
+            s = jnp.tanh(s / spec.softcap) * spec.softcap
+        cols = start + jnp.arange(blk, dtype=jnp.int32)
+        mask = jnp.broadcast_to(cols[None, :] < Sk, (Sq, blk))   # kv padding
+        if spec.causal:
+            mask &= cols[None, :] <= rows[:, None]
+            if spec.prefix_len:
+                mask |= ((rows[:, None] < spec.prefix_len)
+                         & (cols[None, :] < spec.prefix_len)
+                         & (cols[None, :] < Sk))
+        if spec.window is not None:
+            mask &= (rows[:, None] - cols[None, :]) < spec.window
+        s = jnp.where(mask[None, None, :, None, :], s, -1e30)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(s > -1e29, p, 0.0)    # fully-masked rows stay at zero
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bnsgt,btnk->bnsgk", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, n, Sq, G), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, n, Sq, G), jnp.float32)
+    a0 = jnp.zeros((B, n, Sq, G, hd), jnp.float32)
+    starts = jnp.arange(nblk, dtype=jnp.int32) * blk
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, starts))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(v.dtype)          # (B,Sq,n,G,hd)
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params:
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_len, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# --------------------------------------------------------------------------- #
+# gated MLP (SwiGLU / GeGLU)
+# --------------------------------------------------------------------------- #
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    kg, ku, kd = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "w_gate": _dense_init(kg, (d, f), d, dt),
+        "w_up": _dense_init(ku, (d, f), d, dt),
+        "w_down": _dense_init(kd, (f, d), f, dt),
+    }
+    ax = {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"), "w_down": ("mlp", "embed")}
+    return p, ax
+
+
+def mlp(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    act = jax.nn.gelu if cfg.mlp_activation == "gelu" else jax.nn.silu
+    h = act(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = constrain(h, ("data", None, "mlp_act"))
+    return constrain(h @ p["w_down"], ("data", None, "embed_act"))
+
+
+# --------------------------------------------------------------------------- #
+# logits / loss
+# --------------------------------------------------------------------------- #
+
+
+def lm_logits(cfg: ModelConfig, embed_table: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    logits = jnp.einsum("bsd,vd->bsv", x, embed_table.astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    if cfg.final_logit_softcap is not None:
+        logits = jnp.tanh(logits / cfg.final_logit_softcap) * cfg.final_logit_softcap
+    # mask padded vocab columns so softmax normalization is over the true vocab
+    pv = logits.shape[-1]
+    if pv != cfg.vocab_size:
+        col = jax.lax.broadcasted_iota(jnp.int32, (pv,), 0)
+        logits = jnp.where(col < cfg.vocab_size, logits, -1e30)
+    return constrain(logits, ("data", None, "vocab_act"))
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                          mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    mask = mask.astype(jnp.float32)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,135 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+TPU-native formulation (no (tokens, experts, capacity) one-hot): tokens are
+routed with a fused top-k (see ``repro.kernels.moe_router`` for the Pallas
+version; this module is the lowering path), positions within each expert are
+computed by a stable argsort + segment-offset trick, and the expert matmul is
+a single einsum over a (experts, capacity, d_model) buffer whose expert axis
+is sharded over the `model` mesh axis (expert parallelism).  XLA inserts the
+scatter/gather collectives that play the role of the GPU all-to-all.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.rules import constrain
+
+Params = Dict[str, Any]
+
+
+def init_moe(key, cfg: ModelConfig):
+    m = cfg.moe
+    d = cfg.d_model
+    kr, kg, ku, kd, ksg, ksu, ksd = jax.random.split(key, 7)
+    dt = jnp.dtype(cfg.dtype)
+
+    def dense(k, shape, fan_in):
+        return (jax.random.normal(k, shape, jnp.float32) * fan_in ** -0.5).astype(dt)
+
+    p = {
+        "router": (jax.random.normal(kr, (d, m.n_experts), jnp.float32) * d ** -0.5),
+        "w_gate": dense(kg, (m.n_experts, d, m.d_expert), d),
+        "w_up": dense(ku, (m.n_experts, d, m.d_expert), d),
+        "w_down": dense(kd, (m.n_experts, m.d_expert, d), m.d_expert),
+    }
+    # 'experts' wins the model axis when n_experts divides it (expert parallel,
+    # kimi-k2); otherwise 'expert_mlp' takes it (tensor parallel inside each
+    # expert, grok-1's 8 experts).  logical_spec's used-axis bookkeeping makes
+    # this fallback automatic.
+    ax = {
+        "router": ("embed", "experts"),
+        "w_gate": ("experts", "expert_embed", "expert_mlp"),
+        "w_up": ("experts", "expert_embed", "expert_mlp"),
+        "w_down": ("experts", "expert_mlp", "expert_embed"),
+    }
+    if m.n_shared_experts:
+        f = m.n_shared_experts * m.d_expert
+        p["shared"] = {
+            "w_gate": dense(ksg, (d, f), d),
+            "w_up": dense(ksu, (d, f), d),
+            "w_down": dense(ksd, (f, d), f),
+        }
+        ax["shared"] = {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"),
+                        "w_down": ("mlp", "embed")}
+    return p, ax
+
+
+def expert_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    m = cfg.moe
+    cap = int(n_tokens * m.top_k / m.n_experts * m.capacity_factor)
+    return max(8, ((cap + 7) // 8) * 8)  # 8-aligned for TPU sublanes
+
+
+def route(cfg: ModelConfig, router: jnp.ndarray, x: jnp.ndarray):
+    """Returns (gates (T,k) fp32 renormalized, expert_ids (T,k) int32, aux loss)."""
+    m = cfg.moe
+    logits = (x.astype(jnp.float32) @ router).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eids = jax.lax.top_k(probs, m.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    # load-balance auxiliary loss (Switch-style): E * sum_e f_e * p_e
+    pe = jnp.mean(probs, axis=0)
+    fe = jnp.mean(
+        jnp.sum(jax.nn.one_hot(eids, m.n_experts, dtype=jnp.float32), axis=1), axis=0)
+    aux = m.n_experts * jnp.sum(pe * fe)
+    return gates, eids.astype(jnp.int32), aux
+
+
+def dispatch_indices(eids: jnp.ndarray, n_experts: int, capacity: int):
+    """Sort-based slot assignment.
+
+    eids: (T, k) int32 -> (slots (T*k,), keep (T*k,) bool).  slot = e*C + pos,
+    with tokens beyond an expert's capacity dropped (slot -> dummy E*C).
+    """
+    flat = eids.reshape(-1)
+    n = flat.shape[0]
+    order = jnp.argsort(flat, stable=True)
+    sorted_eid = flat[order]
+    seg_start = jnp.searchsorted(sorted_eid, jnp.arange(n_experts, dtype=flat.dtype))
+    pos_sorted = jnp.arange(n, dtype=jnp.int32) - seg_start[sorted_eid].astype(jnp.int32)
+    pos = jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted)
+    keep = pos < capacity
+    slots = jnp.where(keep, flat * capacity + pos, n_experts * capacity)
+    return slots.astype(jnp.int32), keep
+
+
+def moe_ffn(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y, aux_loss)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+    gates, eids, aux = route(cfg, p["router"], xt)
+    C = expert_capacity(cfg, T)
+    slots, keep = dispatch_indices(eids, m.n_experts, C)
+
+    # scatter tokens (repeated per chosen expert) into the dispatch buffer
+    tok_idx = jnp.repeat(jnp.arange(T, dtype=jnp.int32), m.top_k)
+    buf = jnp.zeros((m.n_experts * C + 1, D), x.dtype)
+    buf = buf.at[slots].set(xt[tok_idx], mode="drop", unique_indices=True)
+    ebuf = buf[: m.n_experts * C].reshape(m.n_experts, C, D)
+    ebuf = constrain(ebuf, ("experts_act", "expert_cap", "moe_contract"))
+
+    act = jax.nn.gelu if cfg.mlp_activation == "gelu" else jax.nn.silu
+    h = act(jnp.einsum("ecd,edf->ecf", ebuf, p["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", ebuf, p["w_up"])
+    h = constrain(h, ("experts_act", "moe_h_cap", "expert_mlp"))
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    out = constrain(out, ("experts_act", "moe_h_cap", None))
+
+    # gather back + top-k weighted combine
+    out_flat = jnp.concatenate([out.reshape(m.n_experts * C, D),
+                                jnp.zeros((1, D), out.dtype)], axis=0)
+    per_choice = out_flat[slots]                                   # (T*k, D)
+    w = (gates.reshape(-1) * keep.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.sum((per_choice * w[:, None]).reshape(T, m.top_k, D), axis=1)
+
+    if m.n_shared_experts:
+        sp = p["shared"]
+        hs = act(xt @ sp["w_gate"]) * (xt @ sp["w_up"])
+        y = y + hs @ sp["w_down"]
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,214 @@
+"""Family dispatch: one uniform interface over every architecture family.
+
+The rest of the framework (DFL protocol, launcher, dry-run, benchmarks) only
+talks to these six functions:
+
+    init_params(cfg, key)          -> (params, logical_axes)
+    abstract_params(cfg)           -> (ShapeDtypeStruct tree, logical_axes)
+    compute_loss(cfg, params, batch, remat) -> (loss, metrics)
+    batch_specs(cfg, shape)        -> dict of ShapeDtypeStruct (train/prefill)
+    init_decode_cache(cfg, shape)  -> cache pytree (decode modes)
+    serve_step(cfg, params, cache, token) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeSpec
+from repro.models import encdec as E
+from repro.models import layers as L
+from repro.models import transformer as T
+
+Params = Dict[str, Any]
+
+
+def is_encdec(cfg: ModelConfig) -> bool:
+    return cfg.family in ("encdec", "audio")
+
+
+def has_prefix(cfg: ModelConfig) -> bool:
+    return cfg.family == "vlm"
+
+
+def frames_for(cfg: ModelConfig, seq_len: int) -> int:
+    return max(seq_len // E.AUDIO_FRAME_RATIO, 8)
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+
+
+def init_params(cfg: ModelConfig, key) -> Tuple[Params, Params]:
+    if is_encdec(cfg):
+        return E.init_encdec(key, cfg)
+    return T.init_decoder(key, cfg)
+
+
+def abstract_params(cfg: ModelConfig) -> Tuple[Any, Params]:
+    """Param ShapeDtypeStructs + logical axes, with no allocation."""
+    key = jax.random.PRNGKey(0)
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k)[0], key)
+    # logical axes are shape-independent; build them from a real (tiny) trace:
+    # init fns return them without touching array values, so eval_shape of the
+    # axes side would turn tuples into tracers — instead call the init
+    # structure helpers directly under eval_shape for params only.
+    axes = _logical_axes(cfg)
+    return shapes, axes
+
+
+def _logical_axes(cfg: ModelConfig) -> Params:
+    # Axes trees are computed by running init under eval_shape and keeping the
+    # second output, which is made of plain python tuples (not arrays).
+    out = {}
+
+    def capture(k):
+        p, ax = init_params(cfg, k)
+        out["ax"] = ax
+        return p
+
+    jax.eval_shape(capture, jax.random.PRNGKey(0))
+    return out["ax"]
+
+
+# --------------------------------------------------------------------------- #
+# batches and loss
+# --------------------------------------------------------------------------- #
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+    if shape.mode in ("train", "prefill"):
+        if is_encdec(cfg):
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+                "loss_mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+                "frames": jax.ShapeDtypeStruct((B, frames_for(cfg, S), cfg.d_model), dt),
+            }
+        if has_prefix(cfg):
+            s_text = S - cfg.n_prefix_tokens
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, s_text), i32),
+                "labels": jax.ShapeDtypeStruct((B, s_text), i32),
+                "loss_mask": jax.ShapeDtypeStruct((B, s_text), jnp.float32),
+                "prefix_embeds": jax.ShapeDtypeStruct((B, cfg.n_prefix_tokens, cfg.d_model), dt),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+            "loss_mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+        }
+    # decode: one new token against a seq_len-sized cache
+    return {"token": jax.ShapeDtypeStruct((B, 1), i32)}
+
+
+def batch_logical_axes(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, tuple]:
+    if shape.mode in ("train", "prefill"):
+        ax = {"tokens": ("data", None), "labels": ("data", None),
+              "loss_mask": ("data", None)}
+        if is_encdec(cfg):
+            ax["frames"] = ("data", None, "embed_act")
+        if has_prefix(cfg):
+            ax["prefix_embeds"] = ("data", None, "embed_act")
+        return ax
+    return {"token": ("data", None)}
+
+
+def compute_loss(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray],
+                 remat: bool = False) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    if is_encdec(cfg):
+        logits, aux = E.forward(cfg, params, batch["tokens"], batch["frames"], remat=remat)
+    elif has_prefix(cfg):
+        logits, aux = T.forward(cfg, params, batch["tokens"],
+                                prefix_embeds=batch["prefix_embeds"], remat=remat)
+        logits = logits[:, cfg.n_prefix_tokens:]
+    else:
+        logits, aux = T.forward(cfg, params, batch["tokens"], remat=remat)
+    ce = L.softmax_cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    aux_w = cfg.moe.router_aux_weight if cfg.moe else 0.0
+    loss = ce + aux_w * aux
+    return loss, {"ce": ce, "moe_aux": aux}
+
+
+def forward_logits(cfg: ModelConfig, params: Params,
+                   batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Prefill-mode forward (no loss)."""
+    if is_encdec(cfg):
+        logits, _ = E.forward(cfg, params, batch["tokens"], batch["frames"])
+    elif has_prefix(cfg):
+        logits, _ = T.forward(cfg, params, batch["tokens"],
+                              prefix_embeds=batch["prefix_embeds"])
+    else:
+        logits, _ = T.forward(cfg, params, batch["tokens"])
+    return logits
+
+
+# --------------------------------------------------------------------------- #
+# decode
+# --------------------------------------------------------------------------- #
+
+
+def init_decode_cache(cfg: ModelConfig, shape: ShapeSpec) -> Params:
+    if is_encdec(cfg):
+        return E.init_cache(cfg, shape.global_batch, shape.seq_len,
+                            frames_for(cfg, shape.seq_len))
+    return T.init_cache(cfg, shape.global_batch, shape.seq_len)
+
+
+def abstract_decode_cache(cfg: ModelConfig, shape: ShapeSpec):
+    return jax.eval_shape(lambda: init_decode_cache(cfg, shape))
+
+
+def serve_step(cfg: ModelConfig, params: Params, cache: Params,
+               token: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
+    if is_encdec(cfg):
+        return E.decode_step(cfg, params, cache, token)
+    return T.decode_step(cfg, params, cache, token)
+
+
+# --------------------------------------------------------------------------- #
+# arch registry
+# --------------------------------------------------------------------------- #
+
+ARCH_IDS = [
+    "kimi-k2-1t-a32b", "seamless-m4t-medium", "gemma2-2b", "smollm-360m",
+    "recurrentgemma-2b", "smollm-135m", "paligemma-3b", "stablelm-1.6b",
+    "grok-1-314b", "mamba2-2.7b",
+]
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    import importlib
+    mod = importlib.import_module(f"repro.configs.{arch_id.replace('-', '_').replace('.', '_')}")
+    return mod.get_config()
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    import importlib
+    mod = importlib.import_module(f"repro.configs.{arch_id.replace('-', '_').replace('.', '_')}")
+    return mod.get_smoke_config()
+
+
+def long_context_capable(cfg: ModelConfig) -> bool:
+    """May this arch run the long_500k shape? (sub-quadratic path required)"""
+    if cfg.family in ("ssm", "hybrid"):
+        return True
+    # dense archs qualify only with a sliding-window/local attention variant
+    return cfg.attn_pattern in ("local", "local_global")
+
+
+def supported_shapes(cfg: ModelConfig):
+    out = []
+    for name, spec in INPUT_SHAPES.items():
+        if name == "long_500k" and not long_context_capable(cfg):
+            continue
+        out.append(spec)
+    return out

@@ -1,0 +1,103 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block = dual-branch: GeLU(W_g x)  *  RG-LRU(causal-conv(W_r x)), then out-proj.
+Training/prefill uses ``lax.associative_scan`` over time (log-depth on TPU);
+decode carries (h, conv_tail).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.ssm import _causal_conv
+from repro.sharding.rules import constrain
+
+Params = Dict[str, Any]
+
+_C = 8.0  # RG-LRU temperature constant (Griffin eq. 4)
+CONV_WIDTH = 4
+
+
+def init_rglru(key, cfg: ModelConfig):
+    d = cfg.d_model
+    dr = d  # lru width = d_model (RecurrentGemma-2B)
+    kg, kr, ko, kc, ka, kx, kl = jax.random.split(key, 7)
+    dt = jnp.dtype(cfg.dtype)
+
+    def dense(k, shape, fan_in):
+        return (jax.random.normal(k, shape, jnp.float32) * fan_in ** -0.5).astype(dt)
+
+    p = {
+        "w_gelu": dense(kg, (d, dr), d),
+        "w_rec": dense(kr, (d, dr), d),
+        "conv_w": (jax.random.normal(kc, (CONV_WIDTH, dr), jnp.float32)
+                   * CONV_WIDTH ** -0.5).astype(dt),
+        "conv_b": jnp.zeros((dr,), dt),
+        "w_a": dense(ka, (dr, dr), dr),           # recurrence gate
+        "b_a": jnp.zeros((dr,), jnp.float32),
+        "w_x": dense(kx, (dr, dr), dr),           # input gate
+        "b_x": jnp.zeros((dr,), jnp.float32),
+        # Lambda init so a^c in (0.9, 0.999) per Griffin
+        "lam": jnp.log(jnp.expm1(
+            jnp.linspace(0.9, 0.999, dr, dtype=jnp.float32) ** -(1.0 / _C) - 1.0 + 1e-8)),
+        "w_out": dense(ko, (dr, d), dr),
+    }
+    ax = {
+        "w_gelu": ("embed", "rnn_width"), "w_rec": ("embed", "rnn_width"),
+        "conv_w": (None, "rnn_width"), "conv_b": ("rnn_width",),
+        "w_a": ("rnn_width", "rnn_width"), "b_a": ("rnn_width",),
+        "w_x": ("rnn_width", "rnn_width"), "b_x": ("rnn_width",),
+        "lam": ("rnn_width",), "w_out": ("rnn_width", "embed"),
+    }
+    return p, ax
+
+
+def _gates(p: Params, x: jnp.ndarray):
+    """x (B,S,dr) -> (log_a, gated input) in fp32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_x"].astype(jnp.float32) + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r              # (B,S,dr) <= 0
+    a2 = jnp.exp(2.0 * log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * xf)
+    return log_a, gated_x
+
+
+def rglru_forward(cfg: ModelConfig, p: Params, x_res: jnp.ndarray) -> jnp.ndarray:
+    """x_res: (B, S, D) -> (B, S, D)."""
+    branch_g = jax.nn.gelu((x_res @ p["w_gelu"]).astype(jnp.float32))
+    xr = x_res @ p["w_rec"]
+    xr, _ = _causal_conv(xr, p["conv_w"], p["conv_b"])
+    log_a, b = _gates(p, xr)
+
+    def combine(left, right):
+        la_l, b_l = left
+        la_r, b_r = right
+        return la_l + la_r, jnp.exp(la_r) * b_l + b_r
+
+    _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    y = (branch_g * h).astype(x_res.dtype) @ p["w_out"]
+    return constrain(y, ("data", None, "embed_act"))
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> Params:
+    dr = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, dr), jnp.float32),
+        "conv_tail": jnp.zeros((batch, CONV_WIDTH - 1, dr), dtype),
+    }
+
+
+def rglru_decode_step(cfg: ModelConfig, p: Params, cache: Params,
+                      x_res: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
+    """x_res: (B, 1, D)."""
+    branch_g = jax.nn.gelu((x_res @ p["w_gelu"]).astype(jnp.float32))
+    xr = x_res @ p["w_rec"]
+    xr, new_tail = _causal_conv(xr, p["conv_w"], p["conv_b"], tail=cache["conv_tail"])
+    log_a, b = _gates(p, xr)
+    h = jnp.exp(log_a[:, 0]) * cache["h"] + b[:, 0]
+    y = (branch_g * h[:, None, :]).astype(x_res.dtype) @ p["w_out"]
+    return y, {"h": h, "conv_tail": new_tail}

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (Optimizer, adafactor, adam, get_optimizer,
+                                    sgd, sgdm_bf16)
+
+__all__ = ["Optimizer", "adafactor", "adam", "sgd", "sgdm_bf16", "get_optimizer"]

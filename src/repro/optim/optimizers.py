@@ -1,0 +1,181 @@
+"""Pure-JAX optimizers (no optax in this container).
+
+An ``Optimizer`` is a triple of pure functions; its state mirrors the param
+tree (so the param sharding specs apply leaf-for-leaf) plus a scalar step.
+``state_axes`` returns the logical-axes tree for the state given the params'
+logical axes — used by the launcher to build NamedShardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]   # (grads, state, params)
+    state_axes: Callable[[Any], Any]
+
+
+def _zeros_like_tree(params, dtype=None):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, dtype or p.dtype), params)
+
+
+def sgd(lr: float = 1e-2, momentum: float = 0.9, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32), "mu": _zeros_like_tree(params, jnp.float32)}
+
+    def update(grads, state, params):
+        def upd(g, mu, p):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            mu_new = momentum * mu + g
+            return (p.astype(jnp.float32) - lr * mu_new).astype(p.dtype), mu_new
+
+        out = jax.tree.map(upd, grads, state["mu"], params)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"step": state["step"] + 1, "mu": new_mu}
+
+    def state_axes(param_axes):
+        return {"step": (), "mu": param_axes}
+
+    return Optimizer("sgd", init, update, state_axes)
+
+
+def sgdm_bf16(lr: float = 1e-2, momentum: float = 0.9) -> Optimizer:
+    """Memory-lean variant (bf16 momentum) for HBM-tight trillion-param runs."""
+    base = sgd(lr, momentum)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": _zeros_like_tree(params, jnp.bfloat16)}
+
+    def update(grads, state, params):
+        def upd(g, mu, p):
+            mu_new = (momentum * mu.astype(jnp.float32) + g.astype(jnp.float32))
+            return (p.astype(jnp.float32) - lr * mu_new).astype(p.dtype), mu_new.astype(jnp.bfloat16)
+
+        out = jax.tree.map(upd, grads, state["mu"], params)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"step": state["step"] + 1, "mu": new_mu}
+
+    return Optimizer("sgdm_bf16", init, update, base.state_axes)
+
+
+def adam(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": _zeros_like_tree(params, jnp.float32),
+            "nu": _zeros_like_tree(params, jnp.float32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32)
+            mu_new = b1 * mu + (1 - b1) * g
+            nu_new = b2 * nu + (1 - b2) * jnp.square(g)
+            u = (mu_new / c1) / (jnp.sqrt(nu_new / c2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), mu_new, nu_new
+
+        out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        leaf = lambda t: isinstance(t, tuple)
+        return (jax.tree.map(lambda t: t[0], out, is_leaf=leaf),
+                {"step": step,
+                 "mu": jax.tree.map(lambda t: t[1], out, is_leaf=leaf),
+                 "nu": jax.tree.map(lambda t: t[2], out, is_leaf=leaf)})
+
+    def state_axes(param_axes):
+        return {"step": (), "mu": param_axes, "nu": param_axes}
+
+    return Optimizer("adam", init, update, state_axes)
+
+
+def adafactor(lr: float = 3e-4, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second moment (Shazeer & Stern 2018): matrices store row+col
+    statistics instead of a full fp32 moment — the memory-lean choice for the
+    trillion-param configs (kimi-k2 Adam does not fit v5e HBM; see
+    EXPERIMENTS.md dry-run notes).  Vectors fall back to a full moment."""
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"full": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(one, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        beta = 1.0 - step.astype(jnp.float32) ** -decay
+
+        def upd(g, m, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if "row" in m:
+                row = beta * m["row"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                col = beta * m["col"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                row_mean = jnp.mean(row, axis=-1, keepdims=True)
+                v = (row / jnp.maximum(row_mean, eps))[..., None] * col[..., None, :]
+                new_m = {"row": row, "col": col}
+            else:
+                v = beta * m["full"] + (1 - beta) * g2
+                new_m = {"full": v}
+            u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_m
+
+        leaf = lambda t: isinstance(t, dict) and ("row" in t or "full" in t)
+        out = jax.tree.map(upd, grads, state["mu"], params,
+                           is_leaf=lambda t: False)
+        # out leaves are tuples (new_p, new_m)
+        tup = lambda t: isinstance(t, tuple)
+        return (jax.tree.map(lambda t: t[0], out, is_leaf=tup),
+                {"step": step,
+                 "mu": jax.tree.map(lambda t: t[1], out, is_leaf=tup)})
+
+    def state_axes(param_axes):
+        def one(ax):
+            if isinstance(ax, tuple) and len(ax) >= 2:
+                return {"row": ax[:-1], "col": ax[:-2] + ax[-1:]}
+            return {"full": ax}
+
+        leaf = lambda t: isinstance(t, tuple) and all(
+            isinstance(a, (str, type(None))) for a in t)
+        return {"step": (), "mu": jax.tree.map(one, param_axes, is_leaf=leaf)}
+
+    return Optimizer("adafactor", init, update, state_axes)
+
+
+def get_optimizer(name: str, lr: float = 3e-4) -> Optimizer:
+    if name == "adam":
+        return adam(lr)
+    if name == "sgd":
+        return sgd(lr)
+    if name == "sgdm_bf16":
+        return sgdm_bf16(lr)
+    if name == "adafactor":
+        return adafactor(lr)
+    raise ValueError(f"unknown optimizer {name}")

@@ -1,0 +1,3 @@
+from repro.serving.engine import GenerationConfig, ServeEngine
+
+__all__ = ["ServeEngine", "GenerationConfig"]

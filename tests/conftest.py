@@ -1,0 +1,8 @@
+import os
+import sys
+
+# smoke tests and benches must see the plain 1-device CPU backend (the 512-way
+# device-count override belongs ONLY to launch/dryrun.py)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,89 @@
+"""Decode-cache edge cases: ring-buffer wraparound for local-attention layers
+(decoding far past the window), SSM/RG-LRU state continuity, and cache
+sharding-spec construction for all four input shapes."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import INPUT_SHAPES, ShapeSpec
+from repro.launch import steps as S
+from repro.models import registry as R
+from repro.models import transformer as T
+
+
+def test_ring_buffer_wraparound_matches_forward():
+    """Decode 40 tokens with window=8 (ring holds only 8 slots -> 5x
+    wraparound); logits must match the parallel forward, which masks the same
+    window.  This is the local-attention serving path of gemma2/recurrentgemma
+    at long_500k scale, in miniature."""
+    base = R.get_smoke_config("gemma2-2b")
+    cfg = dataclasses.replace(base, window_size=8)
+    key = jax.random.PRNGKey(0)
+    params, _ = R.init_params(cfg, key)
+    Bsz, S_len = 2, 40
+    tokens = jax.random.randint(key, (Bsz, S_len), 0, cfg.vocab_size)
+
+    fwd_logits, _ = T.forward(cfg, params, tokens)
+    cache = R.init_decode_cache(cfg, ShapeSpec("d", 64, Bsz, "decode"))
+    # local layers must have allocated ring buffers of the window size
+    assert cache["blocks"]["p0"]["k"].shape[2] == 8       # window slots
+    assert cache["blocks"]["p1"]["k"].shape[2] == 64      # global layer: full
+    dec_logits, _ = T.prefill_cache(cfg, params, cache, tokens)
+
+    f = np.asarray(fwd_logits[..., :cfg.vocab_size], np.float32)
+    d = np.asarray(dec_logits[..., :cfg.vocab_size], np.float32)
+    np.testing.assert_allclose(d, f, rtol=0.08, atol=0.15)
+    assert (f.argmax(-1) == d.argmax(-1)).mean() > 0.95
+
+
+def test_hybrid_wraparound():
+    """recurrentgemma: RG-LRU state + local-attn ring past the window."""
+    base = R.get_smoke_config("recurrentgemma-2b")
+    cfg = dataclasses.replace(base, window_size=8)
+    key = jax.random.PRNGKey(1)
+    params, _ = R.init_params(cfg, key)
+    tokens = jax.random.randint(key, (1, 32), 0, cfg.vocab_size)
+    fwd_logits, _ = T.forward(cfg, params, tokens)
+    cache = R.init_decode_cache(cfg, ShapeSpec("d", 48, 1, "decode"))
+    dec_logits, _ = T.prefill_cache(cfg, params, cache, tokens)
+    f = np.asarray(fwd_logits[..., :cfg.vocab_size], np.float32)
+    d = np.asarray(dec_logits[..., :cfg.vocab_size], np.float32)
+    np.testing.assert_allclose(d, f, rtol=0.08, atol=0.2)
+
+
+@pytest.mark.parametrize("arch", ["gemma2-2b", "mamba2-2.7b", "seamless-m4t-medium"])
+def test_serve_artifact_shardings_build(arch):
+    """Cache sharding specs must build for every decode shape on the abstract
+    production meshes (structure-only; no devices needed)."""
+    cfg = R.get_config(arch)
+    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    for shape_name in ("decode_32k", "long_500k"):
+        if shape_name == "long_500k" and not R.long_context_capable(cfg):
+            continue
+        shape = INPUT_SHAPES[shape_name]
+        cache_sds = R.abstract_decode_cache(cfg, shape)
+        axes = S.cache_logical_axes(cfg, cache_sds)
+        # every leaf has a matching axes tuple of the right rank
+        jax.tree.map(lambda ax, s: None if len(ax) == len(s.shape) else
+                     pytest.fail(f"rank mismatch {ax} vs {s.shape}"),
+                     axes, cache_sds, is_leaf=lambda t: isinstance(t, tuple)
+                     and all(isinstance(a, (str, type(None))) for a in t))
+
+
+def test_long_500k_cache_fits_sharded():
+    """gemma2 long_500k: local layers get window-sized rings (not 524288) and
+    the global-layer cache shards its sequence over data."""
+    cfg = R.get_config("gemma2-2b")
+    shape = INPUT_SHAPES["long_500k"]
+    cache_sds = R.abstract_decode_cache(cfg, shape)
+    k_local = cache_sds["blocks"]["p0"]["k"]
+    k_global = cache_sds["blocks"]["p1"]["k"]
+    assert k_local.shape[2] == cfg.window_size          # ring buffer
+    assert k_global.shape[2] == shape.seq_len           # full horizon
+    # total cache bytes sharded over 256 devices stays comfortably in HBM
+    total = sum(np.prod(l.shape) * l.dtype.itemsize
+                for l in jax.tree.leaves(cache_sds))
+    assert total / 256 < 2e9, f"{total/256:.2e} bytes/dev"

@@ -1,0 +1,148 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs the pure-jnp oracles,
+swept over shapes and dtypes (+ hypothesis for the aggregation kernel)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops as K
+from repro.kernels import ref as REF
+
+
+# --------------------------------------------------------------------------- #
+# aggregate
+# --------------------------------------------------------------------------- #
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 40), p=st.integers(1, 700),
+       p_blk=st.sampled_from([128, 256, 512]))
+def test_aggregate_matches_ref(n, p, p_blk):
+    key = jax.random.PRNGKey(n * 1000 + p)
+    k1, k2 = jax.random.split(key)
+    W = jax.nn.softmax(jax.random.normal(k1, (n, n)), axis=-1)
+    X = jax.random.normal(k2, (n, p))
+    out = K.aggregate(W, X, p_blk=p_blk)
+    np.testing.assert_allclose(out, REF.aggregate_ref(W, X), rtol=1e-5, atol=1e-5)
+
+
+def test_aggregate_identity_rows():
+    """Inactive workers (identity rows) must come back bit-stable."""
+    n, p = 8, 300
+    W = np.eye(n, dtype=np.float32)
+    W[0] = np.full(n, 1.0 / n)
+    X = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (n, p)))
+    out = np.asarray(K.aggregate(jnp.asarray(W), jnp.asarray(X)))
+    np.testing.assert_allclose(out[1:], X[1:], rtol=1e-6)
+    np.testing.assert_allclose(out[0], X.mean(0), rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# flash attention
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("s,d", [(64, 32), (128, 64), (192, 64), (256, 128)])
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, None, None), (True, 64, None), (True, 48, 50.0), (False, None, None)])
+def test_flash_attention_shapes(s, d, causal, window, softcap):
+    key = jax.random.PRNGKey(s + d)
+    q, k, v = (jax.random.normal(kk, (2, 3, s, d), jnp.float32)
+               for kk in jax.random.split(key, 3))
+    out = K.flash_attention(q, k, v, causal=causal, window=window, softcap=softcap)
+    ref = REF.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                  softcap=softcap)
+    np.testing.assert_allclose(out, ref, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 3e-4), (jnp.bfloat16, 3e-2)])
+def test_flash_attention_dtypes(dtype, tol):
+    key = jax.random.PRNGKey(7)
+    q, k, v = (jax.random.normal(kk, (1, 2, 128, 64)).astype(dtype)
+               for kk in jax.random.split(key, 3))
+    out = K.flash_attention(q, k, v, causal=True)
+    ref = REF.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_attention_nonaligned_seq():
+    """Sequence not a multiple of the block size exercises padding+masking."""
+    key = jax.random.PRNGKey(3)
+    q, k, v = (jax.random.normal(kk, (1, 2, 200, 32), jnp.float32)
+               for kk in jax.random.split(key, 3))
+    out = K.flash_attention(q, k, v, causal=True, blk_q=128, blk_k=128)
+    ref = REF.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, ref, rtol=3e-4, atol=3e-4)
+
+
+def test_flash_attention_sliding_window_locality():
+    """Tokens beyond the window must not influence the output."""
+    key = jax.random.PRNGKey(11)
+    q, k, v = (jax.random.normal(kk, (1, 1, 256, 32), jnp.float32)
+               for kk in jax.random.split(key, 3))
+    w = 32
+    out1 = K.flash_attention(q, k, v, causal=True, window=w)
+    # perturb keys/values far outside the window of the last query
+    k2 = k.at[:, :, :128, :].set(jax.random.normal(key, (1, 1, 128, 32)))
+    v2 = v.at[:, :, :128, :].set(jax.random.normal(key, (1, 1, 128, 32)))
+    out2 = K.flash_attention(q, k2, v2, causal=True, window=w)
+    np.testing.assert_allclose(out1[:, :, -64:], out2[:, :, -64:], rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# moe router
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("t,e,k", [(16, 4, 1), (250, 16, 2), (512, 64, 8),
+                                   (100, 8, 4)])
+def test_moe_router_matches_ref(t, e, k):
+    logits = jax.random.normal(jax.random.PRNGKey(t + e + k), (t, e))
+    g, i = K.moe_router(logits, k)
+    gr, ir = REF.moe_router_ref(logits, k)
+    np.testing.assert_allclose(g, gr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+
+
+def test_moe_router_gates_normalized():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (333, 12)) * 3
+    g, _ = K.moe_router(logits, 3)
+    np.testing.assert_allclose(np.asarray(g).sum(-1), 1.0, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# ssd chunk (Mamba-2 intra-chunk dual form)
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("g,h,q,n,p", [(2, 2, 32, 16, 16), (4, 8, 64, 32, 64),
+                                       (1, 4, 128, 128, 32)])
+def test_ssd_chunk_matches_ref(g, h, q, n, p):
+    key = jax.random.PRNGKey(g * 100 + q)
+    ks = jax.random.split(key, 4)
+    Bc = jax.random.normal(ks[0], (g, q, n))
+    Cc = jax.random.normal(ks[1], (g, q, n))
+    la = -jnp.cumsum(jax.nn.softplus(jax.random.normal(ks[2], (g, h, q))),
+                     axis=-1) * 0.1
+    xb = jax.random.normal(ks[3], (g, h, q, p))
+    out = K.ssd_chunk(Bc, Cc, la, xb)
+    ref = REF.ssd_chunk_ref(Bc, Cc, la, xb)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunk_causality():
+    """Future positions inside the chunk must not affect earlier outputs."""
+    key = jax.random.PRNGKey(9)
+    ks = jax.random.split(key, 4)
+    g, h, q, n, p = 1, 2, 32, 16, 16
+    Bc = jax.random.normal(ks[0], (g, q, n))
+    Cc = jax.random.normal(ks[1], (g, q, n))
+    la = -jnp.cumsum(jax.nn.softplus(jax.random.normal(ks[2], (g, h, q))), -1) * 0.1
+    xb = jax.random.normal(ks[3], (g, h, q, p))
+    out1 = K.ssd_chunk(Bc, Cc, la, xb)
+    xb2 = xb.at[:, :, q // 2:, :].set(0.0)
+    out2 = K.ssd_chunk(Bc, Cc, la, xb2)
+    np.testing.assert_allclose(out1[:, :, : q // 2], out2[:, :, : q // 2],
+                               rtol=1e-6, atol=1e-6)

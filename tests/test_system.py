@@ -1,0 +1,90 @@
+"""End-to-end behaviour tests for the DySTop system (integration level)."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import MATCHA, AsyDFL, SAADFL, get_mechanism
+from repro.core.protocol import DySTop
+from repro.dfl.simulator import SimConfig, run_simulation
+
+
+def _cfg(**kw):
+    base = dict(n_workers=16, n_rounds=60, phi=0.5, lr=0.1, eval_every=20,
+                seed=0, hidden=48, n_samples=6000)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def test_dystop_end_to_end_learns():
+    hist = run_simulation(DySTop(V=10.0, t_thre=20, max_neighbors=5),
+                          _cfg(n_rounds=100))
+    assert hist.acc_global[-1] > 0.30            # way above 10% chance
+    assert hist.acc_global[-1] > hist.acc_global[0]
+    assert hist.comm_gb[-1] > 0
+    assert all(t2 >= t1 for t1, t2 in zip(hist.sim_time, hist.sim_time[1:]))
+
+
+def test_staleness_tracks_tau_bound():
+    """Paper Fig. 14: tighter tau_bound -> lower average staleness."""
+    h_tight = run_simulation(DySTop(V=10.0, t_thre=20), _cfg(tau_bound=2))
+    h_loose = run_simulation(DySTop(V=10.0, t_thre=20), _cfg(tau_bound=15))
+    assert np.mean(h_tight.staleness_avg) < np.mean(h_loose.staleness_avg)
+
+
+def test_sync_straggler_penalty():
+    """MATCHA (synchronous) pays the slowest worker every round -> much more
+    simulated time per round than DySTop (paper's core motivation)."""
+    h_dy = run_simulation(DySTop(V=10.0, t_thre=20), _cfg())
+    h_ma = run_simulation(MATCHA(), _cfg())
+    per_round_dy = h_dy.sim_time[-1] / h_dy.rounds[-1]
+    per_round_ma = h_ma.sim_time[-1] / h_ma.rounds[-1]
+    assert per_round_ma > 2.0 * per_round_dy
+
+
+def test_saadfl_single_activation():
+    """SA-ADFL activates exactly one worker per round and floods its whole
+    neighborhood; both mechanisms must account communication."""
+    cfg = _cfg(n_rounds=30)
+    h_sa = run_simulation(SAADFL(), cfg)
+    h_dy = run_simulation(DySTop(V=10.0, t_thre=10, max_neighbors=3), cfg)
+    assert h_sa.comm_gb[-1] > 0 and h_dy.comm_gb[-1] > 0
+
+
+def test_all_mechanisms_run():
+    for name in ("dystop", "matcha", "gossipfl", "asydfl", "sa-adfl"):
+        hist = run_simulation(get_mechanism(name), _cfg(n_rounds=12, eval_every=12))
+        assert len(hist.acc_global) >= 1
+        assert np.isfinite(hist.acc_global[-1])
+
+
+def test_non_iid_hurts_everyone_less_dystop():
+    """Qualitative shape of paper Fig. 4: accuracy degrades as phi drops."""
+    h_iid = run_simulation(DySTop(V=10.0, t_thre=20), _cfg(phi=1.0))
+    h_non = run_simulation(DySTop(V=10.0, t_thre=20), _cfg(phi=0.3))
+    assert h_iid.acc_global[-1] >= h_non.acc_global[-1] - 0.05
+
+
+def test_kernel_aggregation_path_in_simulator():
+    h = run_simulation(DySTop(V=10.0, t_thre=10),
+                       _cfg(n_rounds=8, eval_every=8, use_kernel=True))
+    assert np.isfinite(h.acc_global[-1])
+
+
+def test_simulator_reproducible():
+    h1 = run_simulation(DySTop(V=10.0, t_thre=10), _cfg(n_rounds=10, eval_every=10))
+    h2 = run_simulation(DySTop(V=10.0, t_thre=10), _cfg(n_rounds=10, eval_every=10))
+    assert h1.acc_global == h2.acc_global
+    assert h1.sim_time == h2.sim_time
+
+
+def test_edge_dynamics_failures():
+    """Workers failing + rejoining (Table I 'Handling Edge Dynamic'): DySTop
+    keeps making progress, never routes to a down worker that round, and the
+    mechanisms remain crash-free under 10% per-round failures."""
+    hist = run_simulation(DySTop(V=10.0, t_thre=20),
+                          _cfg(n_rounds=80, failure_prob=0.1))
+    assert hist.acc_global[-1] > 0.25
+    assert np.isfinite(hist.acc_global[-1])
+    # sync baseline also survives failures
+    hist_m = run_simulation(MATCHA(), _cfg(n_rounds=20, eval_every=20,
+                                           failure_prob=0.1))
+    assert np.isfinite(hist_m.acc_global[-1])
