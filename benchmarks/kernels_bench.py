@@ -16,8 +16,7 @@ from repro.kernels import ref as REF
 
 
 def _time(fn, *args, iters: int = 20) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))   # one warmup call, blocks any pytree
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)

@@ -1,0 +1,87 @@
+"""Fused round engine vs legacy per-leaf path: rounds/sec at N=100 workers.
+
+The fused engine runs each simulated round as ONE donated jit dispatch over a
+flat (N, P) model buffer (active-row sparse mix + on-device batch sampling +
+masked local SGD over the activated rows only); the legacy path pays per-leaf
+mixing dispatches, a per-worker host ``rng.choice`` loop, and a separate
+all-workers train jit per round.  Both run the identical control-plane
+trajectory, so us/round is apples-to-apples.
+
+Two activation regimes are reported:
+  * steady  — DySTop with ``max_workers=16``: partial activation every round
+    (the regime the mechanism targets; the active-row sparsity pays off).
+  * burst   — uncapped Lyapunov activation at V=10: ~75% of rounds activate
+    exactly 1 worker and ~25% flush all N at once; in the flush rounds the
+    fused engine trains all N rows just like the legacy path, so the ratio is
+    bounded by the flop-bound all-active corner.
+
+    PYTHONPATH=src python -m benchmarks.round_engine
+    PYTHONPATH=src python -m benchmarks.run --only round_engine --quick
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.protocol import DySTop
+from repro.dfl.simulator import SimConfig, run_simulation
+
+from benchmarks.common import emit
+
+
+def _cfg(rounds: int, workers: int, fused: bool, use_kernel: bool = False
+         ) -> SimConfig:
+    return SimConfig(n_workers=workers, n_rounds=rounds, phi=0.5, lr=0.1,
+                     eval_every=rounds, seed=0, fused_engine=fused,
+                     use_kernel=use_kernel)
+
+
+def _mech(max_workers: Optional[int]) -> DySTop:
+    return DySTop(V=10.0, t_thre=20, max_neighbors=7, max_workers=max_workers)
+
+
+def _us_per_round(rounds: int, workers: int, fused: bool,
+                  max_workers: Optional[int], use_kernel: bool = False,
+                  reps: int = 3) -> float:
+    # warmup run (full length, so both PTCA phases and every active-row shape
+    # bucket get compiled), then per-round cost from `wall_s - eval_wall_s -
+    # setup_wall_s` (the simulator separates eval passes and one-time setup
+    # from round work, syncing queued dispatches before evals so device time
+    # is charged to the rounds).  Best of `reps` runs: the floor is robust to
+    # scheduler noise on small boxes.
+    run_simulation(_mech(max_workers), _cfg(rounds, workers, fused, use_kernel))
+
+    def one() -> float:
+        h = run_simulation(_mech(max_workers),
+                           _cfg(rounds, workers, fused, use_kernel))
+        return (h.wall_s - h.eval_wall_s - h.setup_wall_s) / rounds * 1e6
+
+    return min(one() for _ in range(reps))
+
+
+def main(rounds: int = 80, workers: int = 100) -> None:
+    # headline: steady partial activation (max_workers=16)
+    legacy = _us_per_round(rounds, workers, fused=False, max_workers=16)
+    fused = _us_per_round(rounds, workers, fused=True, max_workers=16)
+    emit(f"round_engine/legacy_{workers}w", legacy,
+         "per-leaf mix + host batch loop + all-workers train jit")
+    emit(f"round_engine/fused_{workers}w", fused,
+         "one donated dispatch: sparse mix + device sampling + active-row SGD")
+    emit(f"round_engine/speedup_{workers}w", legacy / fused,
+         f"fused is {legacy / fused:.2f}x faster per simulated round")
+    fused_k = _us_per_round(rounds, workers, fused=True, max_workers=16,
+                            use_kernel=True)
+    emit(f"round_engine/fused_kernel_{workers}w", fused_k,
+         "fused + Pallas aggregate_rows (interpret mode on CPU; compiles on TPU)")
+    # secondary: uncapped bursty activation (all-N flush rounds bound the win)
+    legacy_b = _us_per_round(rounds, workers, fused=False, max_workers=None)
+    fused_b = _us_per_round(rounds, workers, fused=True, max_workers=None)
+    emit(f"round_engine/legacy_{workers}w_burst", legacy_b,
+         "uncapped V=10 activation (1-active / all-active flush cycles)")
+    emit(f"round_engine/fused_{workers}w_burst", fused_b,
+         f"fused is {legacy_b / fused_b:.2f}x in the bursty regime")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    main()

@@ -14,7 +14,8 @@ import time
 
 from benchmarks import (bound_check, comm_overhead, completion_time,
                         convergence_curves, kernels_bench, neighbor_sweep,
-                        phase_ablation, roofline, staleness_sweep, v_sweep)
+                        phase_ablation, roofline, round_engine,
+                        staleness_sweep, v_sweep)
 from benchmarks.common import header
 
 SUITES = {
@@ -36,6 +37,8 @@ SUITES = {
     "bound_check": lambda q: bound_check.main(rounds=60 if q else 120),
     # kernel microbenchmarks
     "kernels": lambda q: kernels_bench.main(),
+    # fused device-resident round engine vs legacy per-leaf path
+    "round_engine": lambda q: round_engine.main(rounds=40 if q else 80),
     # deliverable (g): roofline table from the dry-run artifacts
     "roofline": lambda q: roofline.main(),
 }

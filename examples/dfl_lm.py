@@ -9,7 +9,7 @@ import argparse
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import apply_mixing, mixing_matrix
+from repro.core.aggregation import mixing_matrix
 from repro.core.protocol import DySTop, RoundContext
 from repro.core.staleness import StalenessState
 from repro.dfl import lm_worker as LW
@@ -58,8 +58,8 @@ def main():
             data_sizes=np.ones(n), rng=rng)
         dec = mech.round(ctx)
         W = mixing_matrix(dec.active, dec.links, np.ones(n))
-        fleet.stacked_params = apply_mixing(jnp.asarray(W), fleet.stacked_params,
-                                            use_kernel=False)
+        # one flat (N, P) matmul over the k active rows, not one per leaf
+        LW.fleet_mix(fleet, W, active=dec.active, links=dec.links)
         b = next(streams)
         batch = {k: jnp.asarray(v) for k, v in b.items()}
         fleet.stacked_params, fleet.stacked_opt, losses = step(

@@ -10,10 +10,16 @@ row-stochastic mixing matrix applied per leaf:
 
 which is exactly the shape the Pallas ``aggregate`` kernel accelerates
 (N x N times N x P tiles); the jnp einsum here is the reference/lowering path.
+
+Rows for non-activated workers are identity (they keep their model), so the
+fused round engine only computes the k non-identity rows: ``mixing_rows``
+gathers them (padded to a small set of shape buckets to bound jit
+recompilations) and the ``aggregate_rows`` kernel does the (k, N) @ (N, P)
+skinny matmul, scattered back into the flat buffer.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,18 +33,61 @@ def mixing_matrix(active: np.ndarray, links: np.ndarray,
     links[i, j] = 1 iff worker i mixes in j's model this round (DySTop: only
     activated workers pull; SA-ADFL-style push baselines also set rows of the
     receiving neighbors).  The in-neighbor set includes i itself; weights are
-    relative data sizes sigma_t^{i,j} = D_j / sum_{j' in N_i} D_j'."""
+    relative data sizes sigma_t^{i,j} = D_j / sum_{j' in N_i} D_j'.
+
+    Vectorized: membership is links | I, weights are a masked broadcast of the
+    data sizes normalized per row — no Python row loop.
+    """
+    active = np.asarray(active, bool)
+    links = np.asarray(links, bool)
     n = len(active)
-    W = np.eye(n, dtype=np.float32)
+    eye = np.eye(n, dtype=bool)
+    members = links | eye                       # in-neighbors + self, all rows
     d = np.asarray(data_sizes, np.float64)
-    rows = np.flatnonzero(np.asarray(active, bool) | links.any(axis=1))
-    for i in rows:
-        neigh = np.flatnonzero(links[i])
-        members = np.unique(np.concatenate([neigh, [i]]))
-        w = d[members] / d[members].sum()
-        W[i, :] = 0.0
-        W[i, members] = w.astype(np.float32)
-    return W
+    Wd = np.where(members, d[None, :], 0.0)
+    Wd /= Wd.sum(axis=1, keepdims=True)
+    mixing_rows_mask = active | links.any(axis=1)
+    W = np.where(mixing_rows_mask[:, None], Wd, eye)
+    return W.astype(np.float32)
+
+
+def padded_rows(mask: np.ndarray, min_bucket: int = 8
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """Indices of the k True rows, padded to a power-of-two shape bucket.
+
+    Returns ``(row_ids (k_pad,) i32, valid (k_pad,) bool)``.  Padding repeats
+    a False row's index (with valid=False) so per-row work gathered by
+    ``row_ids`` is a no-op there and the scatter-back rewrites that row's own
+    value (duplicate scatter indices all carry the identical value).  Bucketing
+    to powers of two (clamped to N) bounds the fused jit at O(log N) compiled
+    shapes instead of one per distinct active count.
+    """
+    mask = np.asarray(mask, bool)
+    n = len(mask)
+    rows = np.flatnonzero(mask)
+    k = len(rows)
+    if k == 0:
+        return np.zeros((0,), np.int32), np.zeros((0,), bool)
+    k_pad = min(n, max(min_bucket, 1 << (k - 1).bit_length()))
+    if k_pad > k:
+        idle = np.flatnonzero(~mask)[0]
+        rows = np.concatenate([rows, np.full(k_pad - k, idle, rows.dtype)])
+    return rows.astype(np.int32), mask[rows]
+
+
+def mixing_rows(W: np.ndarray, active: np.ndarray, links: np.ndarray,
+                min_bucket: int = 8) -> Tuple[np.ndarray, np.ndarray]:
+    """Gather the non-identity rows of W for the sparse aggregation path.
+
+    Returns ``(W_rows (k_pad, N) f32, row_ids (k_pad,) i32)`` bucketed by
+    ``padded_rows``; padding entries replicate an identity row of W targeting
+    an idle worker, so the scatter-back is a no-op there.
+    """
+    active = np.asarray(active, bool)
+    links = np.asarray(links, bool)
+    row_ids, _ = padded_rows(active | links.any(axis=1), min_bucket)
+    return (np.ascontiguousarray(W[row_ids], np.float32) if len(row_ids)
+            else np.zeros((0, len(active)), np.float32)), row_ids
 
 
 def apply_mixing(W: jnp.ndarray, stacked_models: Any, use_kernel: bool = True) -> Any:

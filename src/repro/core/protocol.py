@@ -13,7 +13,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+
+try:                                  # jax >= 0.5 top-level API
+    from jax import shard_map
+except ImportError:                   # jax 0.4.x: experimental API, and the
+    from jax.experimental.shard_map import shard_map as _shard_map_experimental
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        # the old API spells the replication check ``check_rep``
+        return _shard_map_experimental(f, mesh=mesh, in_specs=in_specs,
+                                       out_specs=out_specs,
+                                       check_rep=check_vma)
 
 from repro.core import ptca as PT
 from repro.core import waa as WA
@@ -63,13 +73,33 @@ class DySTop(Mechanism):
         self.t_thre = t_thre
         self.max_neighbors = max_neighbors
         self.max_workers = max_workers
+        self._prio1_key = None          # phase-1 priority cache (static inputs)
+        self._prio1 = None
+
+    def _phase1_priority(self, ctx: RoundContext) -> np.ndarray:
+        """Eq. 45/46 depend only on static per-simulation state — cache it.
+
+        The key holds strong references and compares with ``is`` so a
+        recycled object address from a different simulation can never serve
+        stale priorities.
+        """
+        key = (ctx.class_counts, ctx.phys_dist)
+        if (self._prio1_key is None
+                or self._prio1_key[0] is not key[0]
+                or self._prio1_key[1] is not key[1]):
+            self._prio1 = PT.priority_phase1(PT.emd_matrix(ctx.class_counts),
+                                             ctx.phys_dist)
+            self._prio1_key = key
+        return self._prio1
 
     def round(self, ctx: RoundContext) -> RoundDecision:
         active, _ = WA.worker_activation(ctx.staleness, ctx.round_cost, self.V,
                                          self.max_workers)
         top = PT.ptca(ctx.t, self.t_thre, active, ctx.in_range, ctx.class_counts,
                       ctx.phys_dist, ctx.pull_counts, ctx.staleness.tau,
-                      ctx.bandwidth_budget, self.max_neighbors)
+                      ctx.bandwidth_budget, self.max_neighbors,
+                      phase1_priority=(self._phase1_priority(ctx)
+                                       if ctx.t <= self.t_thre else None))
         return RoundDecision(active=active, links=top.links)
 
 

@@ -13,7 +13,7 @@ terminates when total consumption stops growing (Alg. 3 lines 18-21).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -56,13 +56,20 @@ def construct_topology(
     n = len(active)
     links = np.zeros((n, n), bool)
     used = np.zeros(n, np.float64)
-    # per-active-worker candidate lists, descending priority (Alg. 3 lines 2-5)
-    candidates: Dict[int, List[int]] = {}
-    for i in np.flatnonzero(active):
-        cand = [j for j in np.flatnonzero(in_range[i]) if j != i]
-        cand.sort(key=lambda j: -priority[i, j])
+    # per-active-worker candidate arrays, descending priority (Alg. 3 lines
+    # 2-5); one stable numpy argsort per row instead of a Python key-lambda
+    # sort — this is a per-round hot path at burst activations
+    act = np.flatnonzero(active)
+    candidates: Dict[int, np.ndarray] = {}
+    for i in act:
+        reach = in_range[i].copy()
+        reach[i] = False
+        cand = np.flatnonzero(reach)
+        if len(cand):
+            cand = cand[np.argsort(-priority[i, cand], kind="stable")]
         candidates[int(i)] = cand
 
+    ptr = {i: 0 for i in candidates}           # consumed-prefix pointer
     n_selected = {i: 0 for i in candidates}
     prev_total = -1.0
     while True:
@@ -71,17 +78,18 @@ def construct_topology(
                 continue
             if max_neighbors is not None and n_selected[i] >= max_neighbors:
                 continue
-            while cand:
-                j = cand[0]
+            p = ptr[i]
+            while p < len(cand):
+                j = cand[p]
+                p += 1
                 if used[j] + 1 > bandwidth_budget[j]:    # pushee budget (line 11)
-                    cand.pop(0)
-                    continue
+                    continue                             # consumed: skip forever
                 links[i, j] = True                       # line 14
                 used[i] += 1.0
                 used[j] += 1.0
                 n_selected[i] += 1
-                cand.pop(0)
                 break
+            ptr[i] = p
         total = used.sum()
         if total == prev_total:                          # lines 18-21
             break
@@ -93,10 +101,18 @@ def ptca(t: int, t_thre: int, active: np.ndarray, in_range: np.ndarray,
          class_counts: np.ndarray, phys_dist: np.ndarray,
          pull_counts: np.ndarray, tau: np.ndarray,
          bandwidth_budget: np.ndarray,
-         max_neighbors: Optional[int] = None) -> PTCAResult:
-    """Full Alg. 3: choose the phase priority, then greedy construction."""
+         max_neighbors: Optional[int] = None,
+         phase1_priority: Optional[np.ndarray] = None) -> PTCAResult:
+    """Full Alg. 3: choose the phase priority, then greedy construction.
+
+    ``phase1_priority`` optionally short-circuits Eq. 45/46: both depend only
+    on static quantities (label histograms, physical positions), so callers
+    that run every round precompute it once instead of re-deriving the
+    O(N^2 C) EMD matrix per phase-1 round.
+    """
     if t <= t_thre:
-        prio = priority_phase1(emd_matrix(class_counts), phys_dist)
+        prio = (phase1_priority if phase1_priority is not None
+                else priority_phase1(emd_matrix(class_counts), phys_dist))
     else:
         prio = priority_phase2(pull_counts, tau, t)
     return construct_topology(active, in_range, prio, bandwidth_budget,

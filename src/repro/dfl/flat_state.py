@@ -1,0 +1,86 @@
+"""Flat (N, P) model-buffer representation for the fused round engine.
+
+The simulation plane keeps all N worker replicas in ONE device-resident
+``(N, P)`` f32 buffer instead of a stacked pytree: Eq. 4 mixing becomes a
+single skinny matmul over one buffer (the shape the Pallas ``aggregate``
+kernel tiles) rather than one dispatch per leaf, and local SGD vmaps over the
+buffer rows.  ``FlatSpec`` carries the ravel/unravel metadata
+(ravel_pytree-style: static offsets, trailing shapes, dtypes) and is hashable
+so it can ride through ``jax.jit`` as a static argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatSpec:
+    """Static ravel/unravel metadata for a stacked pytree.
+
+    Leaves of the source pytree have a leading worker axis (N, *shape); the
+    flat buffer concatenates each leaf's trailing dims along axis 1 in
+    ``jax.tree.leaves`` order.  Hashable (all-tuple fields + treedef) so it is
+    a valid ``jax.jit`` static argument.
+    """
+    treedef: Any                               # jax PyTreeDef (hashable)
+    shapes: Tuple[Tuple[int, ...], ...]        # per-leaf trailing shapes
+    dtypes: Tuple[str, ...]                    # per-leaf dtype names
+    offsets: Tuple[int, ...]                   # per-leaf start column
+    sizes: Tuple[int, ...]                     # per-leaf column count
+    n_params: int                              # P = sum(sizes)
+
+
+def spec_of(stacked: Any) -> FlatSpec:
+    """Build the FlatSpec for a stacked pytree (leaves (N, ...))."""
+    leaves, treedef = jax.tree.flatten(stacked)
+    shapes = tuple(tuple(l.shape[1:]) for l in leaves)
+    dtypes = tuple(str(l.dtype) for l in leaves)
+    sizes = tuple(int(np.prod(s, dtype=np.int64)) if s else 1 for s in shapes)
+    offsets = tuple(int(o) for o in np.cumsum((0,) + sizes)[:-1])
+    return FlatSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                    offsets=offsets, sizes=sizes, n_params=int(sum(sizes)))
+
+
+def flatten_stacked(stacked: Any) -> Tuple[jnp.ndarray, FlatSpec]:
+    """Stacked pytree (leaves (N, ...)) -> ((N, P) f32 buffer, FlatSpec)."""
+    spec = spec_of(stacked)
+    leaves = jax.tree.leaves(stacked)
+    buf = jnp.concatenate(
+        [l.reshape(l.shape[0], -1).astype(jnp.float32) for l in leaves], axis=1)
+    return buf, spec
+
+
+def unflatten(buf: jnp.ndarray, spec: FlatSpec) -> Any:
+    """(N, P) buffer -> stacked pytree with the original shapes/dtypes."""
+    n = buf.shape[0]
+    leaves = [
+        buf[:, o:o + s].reshape((n,) + shape).astype(dtype)
+        for o, s, shape, dtype in zip(spec.offsets, spec.sizes, spec.shapes,
+                                      spec.dtypes)
+    ]
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def unravel_row(vec: jnp.ndarray, spec: FlatSpec) -> Any:
+    """One worker's (P,) parameter vector -> its single-model pytree.
+
+    Offsets are static, so under jit this is pure slicing/reshaping that XLA
+    fuses away — the flat buffer stays the only materialized storage.
+    """
+    leaves = [
+        vec[o:o + s].reshape(shape).astype(dtype)
+        for o, s, shape, dtype in zip(spec.offsets, spec.sizes, spec.shapes,
+                                      spec.dtypes)
+    ]
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def ravel_row(tree: Any, spec: FlatSpec) -> jnp.ndarray:
+    """Single-model pytree -> (P,) f32 vector (inverse of ``unravel_row``)."""
+    leaves = jax.tree.leaves(tree)
+    return jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.data.synthetic import make_token_stream
+from repro.dfl import flat_state as FS
 from repro.models import registry as R
 from repro.optim import Optimizer, get_optimizer
 
@@ -81,6 +82,35 @@ def worker_streams(cfg: ModelConfig, n_workers: int, batch: int, seq: int,
                 lab[w, b] = stream[s + 1:s + seq + 1]
         yield {"tokens": tok, "labels": lab,
                "loss_mask": np.ones((n_workers, batch, seq), np.float32)}
+
+
+def fleet_mix(fleet: LMFleet, W: np.ndarray,
+              active: Optional[np.ndarray] = None,
+              links: Optional[np.ndarray] = None,
+              use_kernel: bool = False) -> None:
+    """Eq. 4 over the fleet as ONE flat (N, P) matmul instead of per-leaf
+    ``apply_mixing`` dispatches.
+
+    When ``active``/``links`` are given, only the k non-identity rows of W are
+    computed — the same gather -> (k, N) @ (N, P) -> scatter path as the
+    simulation plane's fused engine.  Real architectures have many leaves
+    (the transformer zoo: dozens), so collapsing to one skinny matmul removes
+    a dispatch per leaf per round.
+    """
+    from repro.core.aggregation import mixing_rows
+    from repro.dfl import worker as WK
+
+    buf, spec = FS.flatten_stacked(fleet.stacked_params)
+    if active is not None and links is not None:
+        w_rows, row_ids = mixing_rows(np.asarray(W, np.float32), active, links)
+        buf = WK.mix_flat(buf, jnp.asarray(w_rows), jnp.asarray(row_ids),
+                          use_kernel=use_kernel)
+    elif use_kernel:
+        from repro.kernels import ops as K
+        buf = K.aggregate(jnp.asarray(W, jnp.float32), buf)
+    else:
+        buf = jnp.asarray(W, jnp.float32) @ buf
+    fleet.stacked_params = FS.unflatten(buf, spec)
 
 
 def make_fleet_step(fleet: LMFleet):

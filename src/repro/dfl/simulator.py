@@ -21,12 +21,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import apply_mixing, mixing_matrix
+from repro.core.aggregation import (apply_mixing, mixing_matrix, mixing_rows,
+                                    padded_rows)
 from repro.core.protocol import Mechanism, RoundContext
 from repro.core.staleness import StalenessState
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import (ClassificationData, make_classification,
                                   train_test_split)
+from repro.dfl import flat_state as FS
 from repro.dfl import worker as WK
 from repro.dfl.network import EdgeNetwork, NetworkConfig, heterogeneous_compute_times
 
@@ -70,6 +72,14 @@ class SimConfig:
     target_accuracy: Optional[float] = None
     seed: int = 0
     use_kernel: bool = False          # Pallas aggregate (interpret on CPU)
+    fused_engine: bool = True         # device-resident fused round engine: one
+                                      #   flat (N, P) buffer, single round_step
+                                      #   dispatch (sparse mix + on-device
+                                      #   batch sampling + masked SGD).  Off =
+                                      #   legacy per-leaf path (the
+                                      #   correctness oracle); control-plane
+                                      #   trajectories are identical either
+                                      #   way, only the batch RNG differs.
     n_samples: int = 20000
     dim: int = 32
 
@@ -87,6 +97,12 @@ class History:
     completion_time: Optional[float] = None     # first time target acc reached
     completion_comm_gb: Optional[float] = None
     wall_s: float = 0.0
+    eval_wall_s: float = 0.0      # host wall spent in eval passes
+    setup_wall_s: float = 0.0     # one-time setup before the round loop (data
+                                  #   synthesis, partition, init); wall_s -
+                                  #   eval_wall_s - setup_wall_s is pure
+                                  #   per-round cost (control + model plane),
+                                  #   what the round-engine benchmark reports
     round_durations: List[float] = dataclasses.field(default_factory=list)
     round_active: List[int] = dataclasses.field(default_factory=list)
 
@@ -126,6 +142,24 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
         * cfg.model_bytes_scale
     exp_link_time = net.expected_link_time(model_bytes)
 
+    # batch sampling draws from a dedicated stream so the control-plane rng
+    # trajectory (mechanism decisions, channels, failures) is identical
+    # between the fused engine (jax.random on device) and the legacy path
+    # (numpy on host) — histories stay comparable metric-for-metric
+    batch_rng = np.random.default_rng(cfg.seed + 0x5EED)
+    batch_key = jax.random.PRNGKey(cfg.seed + 0x5EED)
+    if cfg.fused_engine:
+        buf, flat_spec = FS.flatten_stacked(stacked)
+        stacked = None                     # the flat buffer IS the storage
+        data_x = jnp.asarray(data.x)       # device-resident dataset
+        data_y = jnp.asarray(data.y)
+        max_part = max(len(p) for p in parts)
+        part_idx = np.zeros((cfg.n_workers, max_part), np.int32)
+        for i, p in enumerate(parts):
+            part_idx[i, :len(p)] = p       # padding never sampled (uniform
+        part_idx = jnp.asarray(part_idx)   #   draws are < the true size)
+        part_sizes = jnp.asarray(data_sizes.astype(np.int32))
+
     # --- control state ---
     st = StalenessState.create(cfg.n_workers, cfg.tau_bound)
     pull_counts = np.zeros((cfg.n_workers, cfg.n_workers), np.float64)
@@ -140,6 +174,7 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
     comm_bytes = 0.0
     down = np.zeros(cfg.n_workers, bool)   # edge dynamics: failed workers
 
+    hist.setup_wall_s = time.time() - t_wall
     for t in range(1, cfg.n_rounds + 1):
         # edge dynamics: workers fail and rejoin (paper's "Edge Dynamic" axis)
         if cfg.failure_prob > 0:
@@ -188,10 +223,25 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
 
         # aggregation (Eq. 4) + local update (Eq. 5)
         W = mixing_matrix(dec.active, dec.links, data_sizes)
-        stacked = apply_mixing(jnp.asarray(W), stacked, use_kernel=cfg.use_kernel)
-        xb, yb = _sample_batches(parts, data, cfg, rng)
-        stacked, _ = WK.local_train(stacked, xb, yb, jnp.asarray(dec.active),
-                                    lr=cfg.lr, local_steps=cfg.local_steps)
+        if cfg.fused_engine:
+            # one donated dispatch: sparse mix + on-device sampling + SGD,
+            # touching only the activated/receiving rows of the flat buffer
+            w_rows, mix_ids = mixing_rows(W, dec.active, dec.links)
+            train_ids, train_mask = padded_rows(dec.active)
+            ctrl = WK.pack_round_ctrl(mix_ids, train_ids, train_mask)
+            buf, _ = WK.round_step(
+                buf, jnp.asarray(w_rows), jnp.asarray(ctrl),
+                data_x, data_y, part_idx, part_sizes, batch_key,
+                np.int32(t), spec=flat_spec, lr=cfg.lr,
+                local_steps=cfg.local_steps, batch_size=cfg.batch_size,
+                use_kernel=cfg.use_kernel)
+        else:
+            stacked = apply_mixing(jnp.asarray(W), stacked,
+                                   use_kernel=cfg.use_kernel)
+            xb, yb = _sample_batches(parts, data, cfg, batch_rng)
+            stacked, _ = WK.local_train(stacked, xb, yb,
+                                        jnp.asarray(dec.active),
+                                        lr=cfg.lr, local_steps=cfg.local_steps)
 
         # accounting
         n_transfers = int(dec.links.sum())
@@ -211,8 +261,14 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
         else:
             do_eval = t % cfg.eval_every == 0 or t == cfg.n_rounds
         if do_eval:
-            accg, lossg = WK.evaluate_global(stacked, alpha, x_test, y_test)
-            accl, _ = WK.evaluate_stacked(stacked, x_test, y_test)
+            # drain queued round dispatches first so their device time is
+            # charged to the rounds, not to the eval
+            jax.block_until_ready(buf if cfg.fused_engine else stacked)
+            t_eval = time.time()
+            eval_models = FS.unflatten(buf, flat_spec) if cfg.fused_engine \
+                else stacked
+            accg, lossg = WK.evaluate_global(eval_models, alpha, x_test, y_test)
+            accl, _ = WK.evaluate_stacked(eval_models, x_test, y_test)
             hist.rounds.append(t)
             hist.sim_time.append(sim_clock)
             hist.comm_gb.append(comm_bytes / 1e9)
@@ -226,6 +282,7 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
                     and float(accg) >= cfg.target_accuracy):
                 hist.completion_time = sim_clock
                 hist.completion_comm_gb = comm_bytes / 1e9
+            hist.eval_wall_s += time.time() - t_eval
         if cfg.max_sim_time is not None and sim_clock >= cfg.max_sim_time:
             break
 

@@ -5,6 +5,12 @@ paper's CNN/ResNet) but any ``repro.models`` architecture can be plugged in —
 the protocol only needs a param pytree and a local-step function.  All N
 worker replicas live in one stacked pytree (leading worker axis) and local
 SGD for the activated subset is a masked vmap.
+
+Fused round engine: ``round_step`` keeps the N replicas as ONE flat (N, P)
+device buffer (see ``flat_state``) and runs Eq. 4 mixing (active-row sparse
+matmul), on-device minibatch sampling, and masked local SGD (Eq. 5) in a
+single donated jit — one dispatch per simulated round instead of per-leaf
+mixing + a host sampling loop + a separate train dispatch.
 """
 from __future__ import annotations
 
@@ -14,6 +20,8 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.dfl import flat_state as FS
 
 Params = Dict[str, Any]
 
@@ -104,3 +112,131 @@ def evaluate_global(stacked: Params, alpha: jnp.ndarray, x: jnp.ndarray,
 
 def param_bytes(params: Params) -> int:
     return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(params))
+
+
+# --------------------------------------------------------------------------- #
+# fused, device-resident round engine over the flat (N, P) buffer
+# --------------------------------------------------------------------------- #
+
+
+def mlp_loss_flat(vec: jnp.ndarray, spec: FS.FlatSpec, x: jnp.ndarray,
+                  y: jnp.ndarray) -> jnp.ndarray:
+    """MLP loss on one worker's (P,) slice of the flat buffer.
+
+    The unravel is static slicing/reshapes that XLA fuses away, so gradients
+    flow straight back to the flat vector — the buffer stays the only
+    materialized model storage.
+    """
+    return mlp_loss(FS.unravel_row(vec, spec), x, y)
+
+
+def mix_flat(buf: jnp.ndarray, w_rows: jnp.ndarray, row_ids: jnp.ndarray,
+             use_kernel: bool = False) -> jnp.ndarray:
+    """Sparse Eq. 4 over the flat buffer: mix the k non-identity rows only.
+
+    ``w_rows`` (k, N) are the gathered rows of W (see
+    ``core.aggregation.mixing_rows``); all other rows of W are identity, so
+    gather -> (k, N) @ (N, P) -> scatter is exact.
+    """
+    if w_rows.shape[0] == 0:
+        return buf
+    if use_kernel:
+        from repro.kernels import ops as K
+        mixed = K.aggregate_rows(w_rows, buf)
+    else:
+        mixed = w_rows.astype(jnp.float32) @ buf
+    return buf.at[row_ids].set(mixed)
+
+
+def sample_batches_device(key, worker_ids: jnp.ndarray, data_x: jnp.ndarray,
+                          data_y: jnp.ndarray, part_idx: jnp.ndarray,
+                          part_sizes: jnp.ndarray, local_steps: int,
+                          batch_size: int):
+    """Minibatches for the given workers from the device-resident dataset.
+
+    part_idx: (k, max_part) padded sample-index rows for those workers;
+    part_sizes: (k,) true partition lengths.  Draws are uniform over each
+    worker's true partition (padding is never indexed), replacing the
+    per-worker host ``rng.choice`` loop and its H2D batch transfer.  Each
+    worker's stream is keyed by its id (not its position in the gathered row
+    set), so sampling is reproducible across shape buckets.
+    """
+    keys = jax.vmap(jax.random.fold_in, (None, 0))(key, worker_ids)
+
+    def one(k, idx_row, size):
+        r = jax.random.randint(k, (local_steps, batch_size), 0, size)
+        ids = idx_row[r]
+        return data_x[ids], data_y[ids]
+
+    return jax.vmap(one)(keys, part_idx, part_sizes)
+
+
+def local_sgd_flat(buf: jnp.ndarray, xb: jnp.ndarray, yb: jnp.ndarray,
+                   active: jnp.ndarray, spec: FS.FlatSpec, lr: float
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Masked per-worker SGD (Eq. 5) directly on the flat buffer rows."""
+    def per_worker(vec, x_steps, y_steps, a):
+        def one_step(v, xy):
+            x, y = xy
+            loss, g = jax.value_and_grad(mlp_loss_flat)(v, spec, x, y)
+            return v - (lr * a) * g, loss
+
+        vec, losses = jax.lax.scan(one_step, vec, (x_steps, y_steps))
+        return vec, losses.mean()
+
+    return jax.vmap(per_worker)(buf, xb, yb, active.astype(jnp.float32))
+
+
+def pack_round_ctrl(mix_row_ids: np.ndarray, train_row_ids: np.ndarray,
+                    train_mask: np.ndarray) -> np.ndarray:
+    """Concatenate the per-round integer control vectors into ONE host array
+    so the fused dispatch pays a single small H2D transfer instead of three
+    (device_put dominates tiny-array transfer cost on CPU)."""
+    return np.concatenate([np.asarray(mix_row_ids, np.int32),
+                           np.asarray(train_row_ids, np.int32),
+                           np.asarray(train_mask, np.int32)])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "lr", "local_steps", "batch_size",
+                                    "use_kernel"),
+                   donate_argnums=(0,))
+def round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
+               data_x: jnp.ndarray, data_y: jnp.ndarray,
+               part_idx: jnp.ndarray, part_sizes: jnp.ndarray, key, t,
+               *, spec: FS.FlatSpec, lr: float, local_steps: int,
+               batch_size: int, use_kernel: bool = False
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One fused simulated round: sparse mix + on-device sampling + local SGD.
+
+    Both halves of the round exploit the same active-row sparsity: Eq. 4 only
+    rewrites the k non-identity rows of W (``w_rows`` + the mix ids in
+    ``ctrl``), and Eq. 5 only moves the activated workers, so gradients are
+    computed for the gathered activated sub-buffer alone — O(k·N·P +
+    k·steps·batch·P) per round instead of O(N²·P + N·steps·batch·P).  The
+    (N, P) buffer is donated, so XLA updates the model storage in place.
+    ``ctrl`` is the ``pack_round_ctrl`` concatenation of
+    [mix_row_ids (k_mix,) | train_row_ids (k_train,) | train_mask (k_train,)].
+    Returns (new buffer, per-worker mean loss scattered to (N,), zero for
+    idle workers).
+    """
+    n = buf.shape[0]
+    k_mix = w_rows.shape[0]
+    k_train = (ctrl.shape[0] - k_mix) // 2
+    mix_row_ids = ctrl[:k_mix]
+    train_row_ids = ctrl[k_mix:k_mix + k_train]
+    train_mask = ctrl[k_mix + k_train:].astype(jnp.float32)
+    buf = mix_flat(buf, w_rows, mix_row_ids, use_kernel=use_kernel)
+    losses = jnp.zeros((n,), jnp.float32)
+    if k_train == 0:
+        return buf, losses
+    key = jax.random.fold_in(key, t)               # per-round stream, in-jit
+    sub = buf[train_row_ids]                       # (k, P) activated models
+    xb, yb = sample_batches_device(key, train_row_ids, data_x, data_y,
+                                   part_idx[train_row_ids],
+                                   part_sizes[train_row_ids],
+                                   local_steps, batch_size)
+    new_sub, sub_loss = local_sgd_flat(sub, xb, yb, train_mask, spec, lr)
+    buf = buf.at[train_row_ids].set(new_sub)
+    losses = losses.at[train_row_ids].set(sub_loss * train_mask)
+    return buf, losses

@@ -9,10 +9,17 @@ the surrounding pytree traffic.
 TPU-native tiling: W is tiny and lives in VMEM whole; X/Y stream through VMEM
 in (N, p_blk) column panels with p_blk a multiple of 128 lanes so the MXU sees
 aligned (N x N) @ (N x p_blk) tiles.
+
+Sparse variant: rows of W are identity for workers that neither activated nor
+received a push this round (MATCHA's sparse-mixing insight), so the dense
+O(N^2 P) product collapses to the k gathered non-identity rows — the
+``(k, N) @ (N, P)`` skinny matmul of ``aggregate_rows`` — and a scatter back
+into the model buffer.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,12 +31,42 @@ def _aggregate_kernel(w_ref, x_ref, o_ref):
                          preferred_element_type=jnp.float32)
 
 
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Auto-select interpret mode: compile natively on TPU, interpret elsewhere."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
 @functools.partial(jax.jit, static_argnames=("p_blk", "interpret"))
 def aggregate(W: jnp.ndarray, X: jnp.ndarray, p_blk: int = 512,
-              interpret: bool = True) -> jnp.ndarray:
+              interpret: Optional[bool] = None) -> jnp.ndarray:
     """Y = W @ X.  W: (N, N) f32; X: (N, P) f32 -> (N, P) f32."""
     n, p = X.shape
     assert W.shape == (n, n), (W.shape, X.shape)
+    return _panel_matmul(W, X, p_blk, _resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("p_blk", "interpret"))
+def aggregate_rows(W_rows: jnp.ndarray, X: jnp.ndarray, p_blk: int = 512,
+                   interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Active-row sparse path: Y_rows = W_rows @ X.
+
+    W_rows: (k, N) — the k gathered non-identity rows of the mixing matrix;
+    X: (N, P) flat model buffer.  Returns the (k, P) mixed rows; the caller
+    scatters them back (``X.at[row_ids].set(...)``).  Same VMEM panel schedule
+    as ``aggregate`` with the resident operand now (k, N).
+    """
+    k, n = W_rows.shape
+    assert X.shape[0] == n, (W_rows.shape, X.shape)
+    return _panel_matmul(W_rows, X, p_blk, _resolve_interpret(interpret))
+
+
+def _panel_matmul(W: jnp.ndarray, X: jnp.ndarray, p_blk: int,
+                  interpret: bool) -> jnp.ndarray:
+    """(k, N) @ (N, P) with W VMEM-resident and X/Y in (·, p_blk) panels."""
+    k, n = W.shape
+    p = X.shape[1]
     pad = (-p) % p_blk
     if pad:
         X = jnp.pad(X, ((0, 0), (0, pad)))
@@ -39,11 +76,11 @@ def aggregate(W: jnp.ndarray, X: jnp.ndarray, p_blk: int = 512,
         _aggregate_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((n, n), lambda i: (0, 0)),          # W resident
+            pl.BlockSpec((k, n), lambda i: (0, 0)),          # W resident
             pl.BlockSpec((n, p_blk), lambda i: (0, i)),      # X panel
         ],
-        out_specs=pl.BlockSpec((n, p_blk), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((n, padded_p), jnp.float32),
+        out_specs=pl.BlockSpec((k, p_blk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((k, padded_p), jnp.float32),
         interpret=interpret,
     )(W.astype(jnp.float32), X.astype(jnp.float32))
     return out[:, :p]

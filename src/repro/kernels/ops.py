@@ -18,12 +18,19 @@ from repro.kernels import ssd_chunk as _sc
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    # single source of the interpret-unless-TPU policy (aggregate.py)
+    return _agg._resolve_interpret(None)
 
 
 def aggregate(W: jnp.ndarray, X: jnp.ndarray, p_blk: int = 512) -> jnp.ndarray:
     """Y = W @ X (mixing-matrix model aggregation, paper Eq. 4)."""
-    return _agg.aggregate(W, X, p_blk=p_blk, interpret=_interpret())
+    return _agg.aggregate(W, X, p_blk=p_blk)
+
+
+def aggregate_rows(W_rows: jnp.ndarray, X: jnp.ndarray,
+                   p_blk: int = 512) -> jnp.ndarray:
+    """Sparse Eq. 4: the k gathered non-identity rows of W times the buffer."""
+    return _agg.aggregate_rows(W_rows, X, p_blk=p_blk)
 
 
 def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None,

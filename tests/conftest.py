@@ -6,3 +6,6 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# make sibling test helpers (_hypothesis_compat) importable under any
+# pytest import mode
+sys.path.insert(0, os.path.dirname(__file__))
