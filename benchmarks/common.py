@@ -14,8 +14,28 @@ from repro.core.baselines import get_mechanism
 from repro.dfl.simulator import History, SimConfig, run_simulation
 
 
+# every emit() is also recorded here so harness callers (benchmarks.run
+# --json, CI trajectory tracking) can dump machine-readable results without
+# re-parsing the CSV stream
+_RECORDS: list = []
+
+
 def emit(name: str, us_per_call: float, derived: str) -> None:
+    """One result row.  The value column is microseconds per call EXCEPT for
+    rows whose name ends in ``_speedup`` (a unitless ratio) — tooling over
+    the ``--json`` output must key the interpretation on the row name."""
     print(f"{name},{us_per_call:.1f},{derived}")
+    _RECORDS.append({"name": name, "us_per_call": float(us_per_call),
+                     "derived": derived})
+
+
+def records() -> list:
+    """All rows emitted so far (list of dicts, in emit order)."""
+    return list(_RECORDS)
+
+
+def reset_records() -> None:
+    _RECORDS.clear()
 
 
 def header() -> None:

@@ -1,38 +1,52 @@
-"""Fused round engine vs legacy per-leaf path: rounds/sec at N=100 workers.
+"""Fused round engine: legacy vs single-round dispatch vs scan mega-rounds.
 
-The fused engine runs each simulated round as ONE donated jit dispatch over a
-flat (N, P) model buffer (active-row sparse mix + on-device batch sampling +
-masked local SGD over the activated rows only); the legacy path pays per-leaf
-mixing dispatches, a per-worker host ``rng.choice`` loop, and a separate
-all-workers train jit per round.  Both run the identical control-plane
-trajectory, so us/round is apples-to-apples.
+Three layers are measured at N=100 workers, steady partial activation
+(DySTop, ``max_workers=16`` — the regime the mechanism targets):
 
-Two activation regimes are reported:
-  * steady  — DySTop with ``max_workers=16``: partial activation every round
-    (the regime the mechanism targets; the active-row sparsity pays off).
-  * burst   — uncapped Lyapunov activation at V=10: ~75% of rounds activate
-    exactly 1 worker and ~25% flush all N at once; in the flush rounds the
-    fused engine trains all N rows just like the legacy path, so the ratio is
-    bounded by the flop-bound all-active corner.
+* legacy vs fused (``scan_horizon=1``) — PR 1's comparison: per-leaf mixing
+  dispatches + host batch loop vs ONE donated ``round_step`` jit per round.
+* fused vs scan (``scan_horizon=8``) — end-to-end simulations at the default
+  model scale; here the model plane (16 workers x 2 SGD steps) dominates, so
+  amortizing dispatch buys a bounded win.
+* dispatch plane — the horizon scheduler's actual target: the same steady
+  control trajectory executed with per-round ``round_step`` dispatches vs
+  ``mega_round_step`` scans over a paper-testbed-scale edge model proxy
+  (the Jetson-class CNNs of the paper and the large-N DFL deployment
+  regimes are tiny per-worker models, where per-round dispatch IS the
+  cost).  Host planning is identical in both paths and excluded; this is
+  rounds/sec of the engine itself.
 
     PYTHONPATH=src python -m benchmarks.round_engine
     PYTHONPATH=src python -m benchmarks.run --only round_engine --quick
 """
 from __future__ import annotations
 
+import time
 from typing import Optional
 
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import mixing_rows, padded_rows
+from repro.core.planner import HorizonPlanner
 from repro.core.protocol import DySTop
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import make_classification, train_test_split
+from repro.dfl import flat_state as FS
+from repro.dfl import worker as WK
+from repro.dfl.network import (EdgeNetwork, NetworkConfig,
+                               heterogeneous_compute_times)
 from repro.dfl.simulator import SimConfig, run_simulation
 
 from benchmarks.common import emit
 
 
-def _cfg(rounds: int, workers: int, fused: bool, use_kernel: bool = False
-         ) -> SimConfig:
+def _cfg(rounds: int, workers: int, fused: bool, use_kernel: bool = False,
+         scan_horizon: int = 1) -> SimConfig:
     return SimConfig(n_workers=workers, n_rounds=rounds, phi=0.5, lr=0.1,
                      eval_every=rounds, seed=0, fused_engine=fused,
-                     use_kernel=use_kernel)
+                     use_kernel=use_kernel, scan_horizon=scan_horizon)
 
 
 def _mech(max_workers: Optional[int]) -> DySTop:
@@ -41,40 +55,145 @@ def _mech(max_workers: Optional[int]) -> DySTop:
 
 def _us_per_round(rounds: int, workers: int, fused: bool,
                   max_workers: Optional[int], use_kernel: bool = False,
-                  reps: int = 3) -> float:
+                  scan_horizon: int = 1, reps: int = 3) -> float:
     # warmup run (full length, so both PTCA phases and every active-row shape
     # bucket get compiled), then per-round cost from `wall_s - eval_wall_s -
     # setup_wall_s` (the simulator separates eval passes and one-time setup
     # from round work, syncing queued dispatches before evals so device time
     # is charged to the rounds).  Best of `reps` runs: the floor is robust to
     # scheduler noise on small boxes.
-    run_simulation(_mech(max_workers), _cfg(rounds, workers, fused, use_kernel))
+    run_simulation(_mech(max_workers),
+                   _cfg(rounds, workers, fused, use_kernel, scan_horizon))
 
     def one() -> float:
         h = run_simulation(_mech(max_workers),
-                           _cfg(rounds, workers, fused, use_kernel))
+                           _cfg(rounds, workers, fused, use_kernel,
+                                scan_horizon))
         return (h.wall_s - h.eval_wall_s - h.setup_wall_s) / rounds * 1e6
 
     return min(one() for _ in range(reps))
 
 
+def _dispatch_plane(workers: int, horizon: int = 8, n_plan: int = 48,
+                    dim: int = 8, hidden: int = 8, batch: int = 8,
+                    steps: int = 1, reps: int = 12) -> tuple:
+    """Steady-regime control trajectory executed per-round vs as mega-rounds.
+
+    Plans ``n_plan`` rounds of REAL DySTop control (WAA + PTCA over a real
+    edge network) once with the horizon planner, then times only the model
+    plane: per-round ``round_step`` dispatches vs ``mega_round_step`` scans
+    of ``horizon`` rounds, over an edge-proxy model (P ~ ``dim*hidden`` —
+    the paper-testbed / large-N regime where dispatch dominates).  Returns
+    (us/round single, us/round mega).
+    """
+    rng = np.random.default_rng(0)
+    full = make_classification(8000, dim, seed=0)
+    data, _ = train_test_split(full, 0.2, seed=0)
+    parts, class_counts = dirichlet_partition(data, workers, 0.5, seed=0)
+    data_sizes = np.array([len(p) for p in parts], np.float64)
+    net = EdgeNetwork(NetworkConfig(n_workers=workers), rng)
+    h_i = heterogeneous_compute_times(workers, 1.0, rng, sigma=0.75)
+    model_bytes = 4 * dim * hidden * 25.0
+    planner = HorizonPlanner(
+        _mech(16), h_i=h_i, in_range=net.in_range(),
+        exp_link_time=net.expected_link_time(model_bytes),
+        model_bytes=model_bytes, class_counts=class_counts,
+        data_sizes=data_sizes, net=net, rng=rng, tau_bound=5,
+        bandwidth_budget=8.0, link_timeout_s=5.0, sync_link_timeout_s=30.0)
+    plans = planner.plan(n_plan)
+    # drop the burn-in, keep a bucket-uniform steady run so the mega path is
+    # whole scan chunks (run_simulation splits chunks the same way)
+    from repro.core.aggregation import plan_buckets
+
+    plans = [p for p in plans[8:] if plan_buckets(p.active, p.links)
+             == plan_buckets(plans[8].active, plans[8].links)]
+    plans = plans[: len(plans) // horizon * horizon]
+    assert len(plans) >= horizon, f"steady run too short: {len(plans)}"
+
+    stacked = WK.init_stacked(jax.random.PRNGKey(0), workers, dim, hidden,
+                              data.n_classes)
+    buf, spec = FS.flatten_stacked(stacked)
+    data_x = jnp.asarray(data.x)
+    data_y = jnp.asarray(data.y)
+    max_part = max(len(p) for p in parts)
+    part_idx = np.zeros((workers, max_part), np.int32)
+    for i, p in enumerate(parts):
+        part_idx[i, :len(p)] = p
+    part_idx = jnp.asarray(part_idx)
+    part_sizes = jnp.asarray(data_sizes.astype(np.int32))
+    key = jax.random.PRNGKey(1)
+    kw = dict(spec=spec, lr=0.05, local_steps=steps, batch_size=batch)
+
+    def single_all(b):
+        for p in plans:
+            w_rows, mix_ids = mixing_rows(p.W, p.active, p.links)
+            train_ids, train_mask = padded_rows(p.active)
+            ctrl = WK.pack_round_ctrl(mix_ids, train_ids, train_mask)
+            b, _ = WK.round_step(b, jnp.asarray(w_rows), jnp.asarray(ctrl),
+                                 data_x, data_y, part_idx, part_sizes, key,
+                                 np.int32(p.t), **kw)
+        return b
+
+    def mega_all(b):
+        for i in range(0, len(plans), horizon):
+            w, c, ts = WK.pack_horizon(plans[i:i + horizon])
+            b, _ = WK.mega_round_step(b, jnp.asarray(w), jnp.asarray(c),
+                                      jnp.asarray(ts), data_x, data_y,
+                                      part_idx, part_sizes, key, **kw)
+        return b
+
+    state = {name: jnp.array(buf) for name in ("single", "mega")}
+    best = {name: float("inf") for name in state}
+    for name, fn in (("single", single_all), ("mega", mega_all)):
+        state[name] = fn(state[name])
+        jax.block_until_ready(state[name])  # compile warmup
+    # interleave the timed reps so load spikes on small shared boxes hit both
+    # paths alike; best-of is then a fair floor for each
+    for _ in range(reps):
+        for name, fn in (("single", single_all), ("mega", mega_all)):
+            t0 = time.time()
+            state[name] = fn(state[name])
+            jax.block_until_ready(state[name])
+            best[name] = min(best[name], (time.time() - t0) / len(plans) * 1e6)
+    return best["single"], best["mega"]
+
+
 def main(rounds: int = 80, workers: int = 100) -> None:
-    # headline: steady partial activation (max_workers=16)
+    # headline: steady partial activation (max_workers=16), default model
     legacy = _us_per_round(rounds, workers, fused=False, max_workers=16)
     fused = _us_per_round(rounds, workers, fused=True, max_workers=16)
     emit(f"round_engine/legacy_{workers}w", legacy,
          "per-leaf mix + host batch loop + all-workers train jit")
     emit(f"round_engine/fused_{workers}w", fused,
-         "one donated dispatch: sparse mix + device sampling + active-row SGD")
+         "one donated dispatch per round (scan_horizon=1; PR 1 engine)")
     emit(f"round_engine/speedup_{workers}w", legacy / fused,
          f"fused is {legacy / fused:.2f}x faster per simulated round")
+    scan = _us_per_round(rounds, workers, fused=True, max_workers=16,
+                         scan_horizon=8)
+    emit(f"round_engine/fused_scan8_{workers}w", scan,
+         "horizon-planned lax.scan mega-rounds (scan_horizon=8), end-to-end")
+    emit(f"round_engine/scan_speedup_{workers}w", fused / scan,
+         f"end-to-end {fused / scan:.2f}x vs per-round dispatch (model plane "
+         f"dominates at default scale)")
+    # dispatch plane: same steady control, edge-proxy model — the horizon
+    # scheduler's target regime (paper-testbed-scale workers, large-N sims)
+    single_d, mega_d = _dispatch_plane(workers, horizon=16, n_plan=80)
+    emit(f"round_engine/dispatch_single_{workers}w", single_d,
+         "steady control executed as per-round round_step dispatches")
+    emit(f"round_engine/dispatch_scan16_{workers}w", mega_d,
+         "same rounds as lax.scan mega-rounds (sampling hoisted off the scan)")
+    emit(f"round_engine/dispatch_scan_speedup_{workers}w", single_d / mega_d,
+         f"mega-rounds are {single_d / mega_d:.2f}x rounds/sec at the "
+         f"dispatch plane (edge-proxy model, N={workers} steady, horizon 16)")
     fused_k = _us_per_round(rounds, workers, fused=True, max_workers=16,
                             use_kernel=True)
     emit(f"round_engine/fused_kernel_{workers}w", fused_k,
          "fused + Pallas aggregate_rows (interpret mode on CPU; compiles on TPU)")
-    # secondary: uncapped bursty activation (all-N flush rounds bound the win)
+    # secondary: uncapped bursty activation (all-N flush rounds bound the win;
+    # bucket changes every round, so scan chunks degrade to single dispatches)
     legacy_b = _us_per_round(rounds, workers, fused=False, max_workers=None)
-    fused_b = _us_per_round(rounds, workers, fused=True, max_workers=None)
+    fused_b = _us_per_round(rounds, workers, fused=True, max_workers=None,
+                            scan_horizon=8)
     emit(f"round_engine/legacy_{workers}w_burst", legacy_b,
          "uncapped V=10 activation (1-active / all-active flush cycles)")
     emit(f"round_engine/fused_{workers}w_burst", fused_b,

@@ -1,22 +1,29 @@
 """Benchmark harness entry point — one function per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+                                            [--json PATH]
 
 Prints ``name,us_per_call,derived`` CSV.  `us_per_call` is wall-clock
 microseconds per simulated round (or kernel call); `derived` carries the
-paper metric for that table.
+paper metric for that table.  ``--json PATH`` additionally writes the same
+rows as machine-readable JSON (plus run metadata) — the CI benchmark-smoke
+job and ``BENCH_*.json`` trajectory tracking consume this.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
+
+import jax
 
 from benchmarks import (bound_check, comm_overhead, completion_time,
                         convergence_curves, kernels_bench, neighbor_sweep,
                         phase_ablation, roofline, round_engine,
                         staleness_sweep, v_sweep)
-from benchmarks.common import header
+from benchmarks.common import header, records
 
 SUITES = {
     # paper Fig. 4 / Fig. 20
@@ -48,6 +55,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None, choices=list(SUITES))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as machine-readable JSON")
     args = ap.parse_args()
 
     header()
@@ -62,7 +71,26 @@ def main() -> None:
             print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}", file=sys.stdout)
             raise
         print(f"# {name} done in {time.time() - t1:.1f}s", file=sys.stderr)
-    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+    total_s = time.time() - t0
+    print(f"# total {total_s:.1f}s", file=sys.stderr)
+    if args.json:
+        payload = {
+            "meta": {
+                "quick": args.quick,
+                "only": args.only,
+                "total_s": round(total_s, 2),
+                "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+                "jax_version": jax.__version__,
+                "backend": jax.default_backend(),
+                "platform": platform.platform(),
+                "python": platform.python_version(),
+            },
+            "results": records(),
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {len(payload['results'])} rows to {args.json}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -51,8 +51,36 @@ def mixing_matrix(active: np.ndarray, links: np.ndarray,
     return W.astype(np.float32)
 
 
-def padded_rows(mask: np.ndarray, min_bucket: int = 8
-                ) -> Tuple[np.ndarray, np.ndarray]:
+def bucket_size(k: int, n: int, min_bucket: int = 8) -> int:
+    """Power-of-two shape bucket for k gathered rows (clamped to N; 0 -> 0).
+
+    Bucketing bounds the fused jit at O(log N) compiled shapes instead of one
+    per distinct active count; the horizon packer takes the max bucket across
+    its rounds, which is again a bucket, so ``lax.scan`` mega-rounds inherit
+    the same bound.
+    """
+    if k <= 0:
+        return 0
+    return min(n, max(min_bucket, 1 << (k - 1).bit_length()))
+
+
+def plan_buckets(active: np.ndarray, links: np.ndarray,
+                 min_bucket: int = 8) -> Tuple[int, int]:
+    """(k_mix, k_train) shape buckets for one round's control masks.
+
+    The single source of truth shared by the simulator's chunk splitter, the
+    horizon packer, and the benchmarks: mix rows are the non-identity rows of
+    W (``active | links.any(1)``), train rows the activated workers.
+    """
+    active = np.asarray(active, bool)
+    links = np.asarray(links, bool)
+    n = len(active)
+    return (bucket_size(int((active | links.any(axis=1)).sum()), n, min_bucket),
+            bucket_size(int(active.sum()), n, min_bucket))
+
+
+def padded_rows(mask: np.ndarray, min_bucket: int = 8,
+                pad_to: int | None = None) -> Tuple[np.ndarray, np.ndarray]:
     """Indices of the k True rows, padded to a power-of-two shape bucket.
 
     Returns ``(row_ids (k_pad,) i32, valid (k_pad,) bool)``.  Padding repeats
@@ -61,14 +89,18 @@ def padded_rows(mask: np.ndarray, min_bucket: int = 8
     value (duplicate scatter indices all carry the identical value).  Bucketing
     to powers of two (clamped to N) bounds the fused jit at O(log N) compiled
     shapes instead of one per distinct active count.
+
+    ``pad_to`` overrides the bucket (horizon packing: every round of a
+    ``lax.scan`` chunk must share one shape); it must be a bucket ≥ k, and a
+    k = 0 round pads with index-0 no-op rows (all-idle ⇒ row 0 is idle).
     """
     mask = np.asarray(mask, bool)
     n = len(mask)
     rows = np.flatnonzero(mask)
     k = len(rows)
-    if k == 0:
+    k_pad = bucket_size(k, n, min_bucket) if pad_to is None else int(pad_to)
+    if k_pad == 0:
         return np.zeros((0,), np.int32), np.zeros((0,), bool)
-    k_pad = min(n, max(min_bucket, 1 << (k - 1).bit_length()))
     if k_pad > k:
         idle = np.flatnonzero(~mask)[0]
         rows = np.concatenate([rows, np.full(k_pad - k, idle, rows.dtype)])
@@ -76,7 +108,8 @@ def padded_rows(mask: np.ndarray, min_bucket: int = 8
 
 
 def mixing_rows(W: np.ndarray, active: np.ndarray, links: np.ndarray,
-                min_bucket: int = 8) -> Tuple[np.ndarray, np.ndarray]:
+                min_bucket: int = 8, pad_to: int | None = None
+                ) -> Tuple[np.ndarray, np.ndarray]:
     """Gather the non-identity rows of W for the sparse aggregation path.
 
     Returns ``(W_rows (k_pad, N) f32, row_ids (k_pad,) i32)`` bucketed by
@@ -85,7 +118,7 @@ def mixing_rows(W: np.ndarray, active: np.ndarray, links: np.ndarray,
     """
     active = np.asarray(active, bool)
     links = np.asarray(links, bool)
-    row_ids, _ = padded_rows(active | links.any(axis=1), min_bucket)
+    row_ids, _ = padded_rows(active | links.any(axis=1), min_bucket, pad_to)
     return (np.ascontiguousarray(W[row_ids], np.float32) if len(row_ids)
             else np.zeros((0, len(active)), np.float32)), row_ids
 

@@ -1,0 +1,162 @@
+"""Horizon scheduler: plan H control-plane rounds ahead of the model plane.
+
+Every ``Mechanism`` decision (WAA activation, PTCA topology, staleness
+bookkeeping, channel/failure dynamics) depends only on round/staleness
+scalars — never on model values — so the coordinator can replay H rounds of
+Alg. 1 on host and hand the fused engine a *batch* of ``PlannedRound``s to
+execute as one ``lax.scan`` mega-dispatch (``dfl.worker.mega_round_step``).
+The planner IS the simulator's control plane: ``run_simulation`` drives it
+one round at a time (so eval points land exactly where the per-round loop
+put them) and flushes the pending plan chunk to the device at horizon
+boundaries.
+
+State evolution here is byte-identical to the pre-planner per-round loop:
+the shared ``numpy`` rng is consumed in the same order (failure draws, then
+the mechanism's own draws, then channel sampling), so trajectories are
+bit-for-bit reproducible at any horizon.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.aggregation import mixing_matrix
+from repro.core.protocol import Mechanism, RoundContext
+from repro.core.staleness import StalenessState
+
+
+@dataclasses.dataclass
+class PlannedRound:
+    """One fully-resolved control-plane round, ready for device dispatch.
+
+    ``active``/``links`` are post-failure-masking (what the model plane must
+    execute); ``W`` is the Eq. 4 mixing matrix; ``duration`` the realized
+    H_t with sampled channels (Eq. 9); ``n_transfers`` the Eq. 10 accounting.
+    """
+    t: int
+    active: np.ndarray            # (N,) bool
+    links: np.ndarray             # (N, N) bool
+    synchronous: bool
+    W: np.ndarray                 # (N, N) f32
+    duration: float
+    n_transfers: int
+
+
+class HorizonPlanner:
+    """Replays WAA/PTCA/staleness bookkeeping to produce ``PlannedRound``s.
+
+    Owns ALL mutable control-plane state (staleness, pull counts, readiness
+    clocks, failure mask, simulated clock, comm accounting); the simulator
+    only reads it back for history records.  ``net`` is duck-typed: anything
+    with ``.dist`` and ``.link_rates()`` (see ``dfl.network.EdgeNetwork``).
+    """
+
+    def __init__(self, mechanism: Mechanism, *, h_i: np.ndarray,
+                 in_range: np.ndarray, exp_link_time: np.ndarray,
+                 model_bytes: float, class_counts: np.ndarray,
+                 data_sizes: np.ndarray, net, rng: np.random.Generator,
+                 tau_bound: int, bandwidth_budget: float,
+                 link_timeout_s: float, sync_link_timeout_s: float,
+                 failure_prob: float = 0.0, failure_persist: float = 0.5):
+        n = len(h_i)
+        self.mechanism = mechanism
+        self.n_workers = n
+        self.h_i = h_i
+        self.in_range = in_range
+        self.exp_link_time = exp_link_time
+        self.model_bytes = model_bytes
+        self.class_counts = class_counts
+        self.data_sizes = data_sizes
+        self.net = net
+        self.rng = rng
+        self.link_timeout_s = link_timeout_s
+        self.sync_link_timeout_s = sync_link_timeout_s
+        self.failure_prob = failure_prob
+        self.failure_persist = failure_persist
+        # mutable control state
+        self.st = StalenessState.create(n, tau_bound)
+        self.pull_counts = np.zeros((n, n), np.float64)
+        self.time_since_act = np.zeros(n, np.float64)
+        self.budget = np.full(n, bandwidth_budget, np.float64)
+        self.down = np.zeros(n, bool)
+        self.t = 0
+        self.sim_clock = 0.0
+        self.comm_bytes = 0.0
+
+    def plan_round(self) -> PlannedRound:
+        """Advance the control plane by one round (Alg. 1 host half)."""
+        rng = self.rng
+        n = self.n_workers
+        self.t += 1
+        t = self.t
+
+        # edge dynamics: workers fail and rejoin (paper's "Edge Dynamic" axis)
+        if self.failure_prob > 0:
+            self.down = ((self.down
+                          & (rng.random(n) < self.failure_persist))
+                         | (~self.down
+                            & (rng.random(n) < self.failure_prob)))
+        up_range = self.in_range & ~self.down[None, :] & ~self.down[:, None]
+
+        # per-round costs (Eq. 7-8 estimate for the coordinator)
+        h_cmp = np.maximum(self.h_i - self.time_since_act, 0.0)
+        est_com = np.where(up_range, self.exp_link_time, 0.0).max(axis=1)
+        round_cost = h_cmp + est_com
+
+        ctx = RoundContext(
+            t=t, round_cost=round_cost,
+            readiness=self.h_i - self.time_since_act, in_range=up_range,
+            class_counts=self.class_counts, phys_dist=self.net.dist,
+            pull_counts=self.pull_counts, staleness=self.st,
+            bandwidth_budget=self.budget, data_sizes=self.data_sizes, rng=rng)
+        dec = self.mechanism.round(ctx)
+        if self.failure_prob > 0:
+            # a down worker can neither train nor serve pulls this round
+            dec.active = dec.active & ~self.down
+            dec.links = dec.links & ~self.down[None, :] & ~self.down[:, None]
+
+        # actual round duration with sampled (dynamic) channels
+        raw_link_time = self.model_bytes / self.net.link_rates()
+        if dec.synchronous:
+            # a synchronous barrier cannot abort a pull: the aggregation needs
+            # every matched neighbor's model, so deep fades stall the whole
+            # round until retransmission succeeds (the straggler/dynamics cost
+            # the paper measures) — bounded by the stall+retry ceiling
+            link_time = np.minimum(raw_link_time, self.sync_link_timeout_s)
+            cmp_part = self.h_i                            # full retrain (sync)
+            eligible = np.ones(n, bool)
+        else:
+            # async pulls degrade gracefully: abort/retry ceiling
+            link_time = np.minimum(raw_link_time, self.link_timeout_s)
+            cmp_part = h_cmp
+            eligible = dec.active
+        com_part = np.where(dec.links, link_time, 0.0).max(axis=1)
+        h_t_i = cmp_part + com_part                        # (N,)
+        duration = float(h_t_i[eligible].max()) if eligible.any() else 0.0
+
+        W = mixing_matrix(dec.active, dec.links, self.data_sizes)
+
+        # bookkeeping (Eqs. 6, 10, 33) — model-value-independent, so it can
+        # run arbitrarily far ahead of the device
+        n_transfers = int(dec.links.sum())
+        self.sim_clock += duration
+        self.comm_bytes += n_transfers * self.model_bytes
+        self.pull_counts += dec.links
+        self.time_since_act += duration
+        self.time_since_act[dec.active] = 0.0
+        self.st.advance(dec.active)
+
+        return PlannedRound(t=t, active=dec.active, links=dec.links,
+                            synchronous=dec.synchronous, W=W,
+                            duration=duration, n_transfers=n_transfers)
+
+    def plan(self, horizon: int,
+             max_round: Optional[int] = None) -> List[PlannedRound]:
+        """Plan up to ``horizon`` rounds (stopping at round ``max_round``)."""
+        plans: List[PlannedRound] = []
+        while len(plans) < horizon and (max_round is None
+                                        or self.t < max_round):
+            plans.append(self.plan_round())
+        return plans

@@ -3,6 +3,14 @@
 A ``Mechanism`` makes per-round control-plane decisions: which workers to
 activate (EXECUTE) and which links to build (the neighbors each activated
 worker PULLs from).  ``DySTop`` = WAA (Alg. 2) + PTCA (Alg. 3).
+
+Contract: ``Mechanism.round`` sees ONLY the ``RoundContext`` scalars — never
+model values (exactly the paper's coordinator, which exchanges bookkeeping
+messages, not weights).  ``core.planner.HorizonPlanner`` relies on this to
+replay H rounds of decisions ahead of the device so the fused engine can
+execute them as one ``lax.scan`` mega-dispatch; any rng a mechanism needs
+must come from ``ctx.rng`` (the planner threads the shared host generator
+through in round order, keeping trajectories bit-for-bit reproducible).
 """
 from __future__ import annotations
 

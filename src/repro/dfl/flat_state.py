@@ -80,6 +80,16 @@ def unravel_row(vec: jnp.ndarray, spec: FlatSpec) -> Any:
     return jax.tree.unflatten(spec.treedef, leaves)
 
 
+def weighted_row(buf: jnp.ndarray, alpha: jnp.ndarray) -> jnp.ndarray:
+    """Weight-averaged (P,) parameter vector straight from the flat buffer.
+
+    The data-size-weighted global model of paper Eq. 11 is a single
+    ``(N,) @ (N, P)`` contraction here — no per-leaf tensordot, no pytree
+    materialization; unravel with ``unravel_row`` when a model is needed.
+    """
+    return alpha.astype(jnp.float32) @ buf
+
+
 def ravel_row(tree: Any, spec: FlatSpec) -> jnp.ndarray:
     """Single-model pytree -> (P,) f32 vector (inverse of ``unravel_row``)."""
     leaves = jax.tree.leaves(tree)

@@ -21,10 +21,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import (apply_mixing, mixing_matrix, mixing_rows,
-                                    padded_rows)
-from repro.core.protocol import Mechanism, RoundContext
-from repro.core.staleness import StalenessState
+from repro.core.aggregation import (apply_mixing, mixing_rows, padded_rows,
+                                    plan_buckets)
+from repro.core.planner import HorizonPlanner, PlannedRound
+from repro.core.protocol import Mechanism
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import (ClassificationData, make_classification,
                                   train_test_split)
@@ -35,6 +35,18 @@ from repro.dfl.network import EdgeNetwork, NetworkConfig, heterogeneous_compute_
 
 @dataclasses.dataclass
 class SimConfig:
+    """Simulation-plane configuration.
+
+    ``scan_horizon`` (fused engine only): the control plane is
+    model-value-independent, so ``core.planner.HorizonPlanner`` resolves up to
+    this many rounds of WAA/PTCA/staleness bookkeeping ahead on host and the
+    engine executes them as ONE donated ``lax.scan`` mega-dispatch
+    (``dfl.worker.mega_round_step``) — amortizing the per-round host↔device
+    dispatch that dominates steady-regime cost.  Horizons are chopped at eval
+    / history points and at the round cap, so histories are identical at any
+    horizon; ``scan_horizon=1`` dispatches per-round via ``round_step`` (the
+    PR-1 oracle path, bit-for-bit).  Ignored by the legacy per-leaf path.
+    """
     n_workers: int = 100
     n_rounds: int = 300               # round cap
     max_sim_time: Optional[float] = None   # stop at this simulated wall-clock;
@@ -80,6 +92,10 @@ class SimConfig:
                                       #   correctness oracle); control-plane
                                       #   trajectories are identical either
                                       #   way, only the batch RNG differs.
+    scan_horizon: int = 8             # fused engine: plan this many rounds
+                                      #   ahead and execute them as one
+                                      #   lax.scan mega-dispatch (see class
+                                      #   docstring); 1 = per-round dispatch
     n_samples: int = 20000
     dim: int = 32
 
@@ -160,131 +176,139 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
         part_idx = jnp.asarray(part_idx)   #   draws are < the true size)
         part_sizes = jnp.asarray(data_sizes.astype(np.int32))
 
-    # --- control state ---
-    st = StalenessState.create(cfg.n_workers, cfg.tau_bound)
-    pull_counts = np.zeros((cfg.n_workers, cfg.n_workers), np.float64)
-    time_since_act = np.zeros(cfg.n_workers, np.float64)
-    budget = np.full(cfg.n_workers, cfg.bandwidth_budget, np.float64)
+    # --- control plane: the horizon planner owns all mutable control state
+    # (staleness, pull counts, readiness clocks, failure mask, sim clock) and
+    # replays Alg. 1 bookkeeping round-by-round — model-value-independent, so
+    # it can run arbitrarily far ahead of the device dispatches
+    planner = HorizonPlanner(
+        mechanism, h_i=h_i, in_range=in_range, exp_link_time=exp_link_time,
+        model_bytes=model_bytes, class_counts=class_counts,
+        data_sizes=data_sizes, net=net, rng=rng, tau_bound=cfg.tau_bound,
+        bandwidth_budget=cfg.bandwidth_budget,
+        link_timeout_s=cfg.link_timeout_s,
+        sync_link_timeout_s=cfg.sync_link_timeout_s,
+        failure_prob=cfg.failure_prob, failure_persist=cfg.failure_persist)
     x_test = jnp.asarray(test.x)
     y_test = jnp.asarray(test.y)
 
     hist = History()
     bound_log = {"active": [], "W": []} if record_history_for_bound else None
-    sim_clock = 0.0
-    comm_bytes = 0.0
-    down = np.zeros(cfg.n_workers, bool)   # edge dynamics: failed workers
+    horizon = max(1, cfg.scan_horizon) if cfg.fused_engine else 1
+
+    def bucket_key(p):
+        """(k_mix, k_train) power-of-two shape buckets of a planned round."""
+        return plan_buckets(p.active, p.links)
+
+    def flush(plans):
+        """Dispatch the pending planned rounds to the model plane (Eq. 4+5).
+
+        Fused path: consecutive rounds sharing one (k_mix, k_train) shape
+        bucket go out as one ``lax.scan`` mega-round; the chunk is split at
+        bucket changes rather than padded to the horizon max, so no round
+        ever pays a larger bucket than its own single-dispatch shape (in the
+        steady regime buckets rarely change, so chunks stay horizon-length).
+        """
+        nonlocal buf, stacked
+        if cfg.fused_engine:
+            while len(plans) > 1:
+                run = 1
+                while (run < len(plans)
+                       and bucket_key(plans[run]) == bucket_key(plans[0])):
+                    run += 1
+                if run == 1:
+                    flush(plans[:1])
+                else:
+                    w_rows_h, ctrl_h, ts = WK.pack_horizon(plans[:run])
+                    buf, _ = WK.mega_round_step(
+                        buf, jnp.asarray(w_rows_h), jnp.asarray(ctrl_h),
+                        jnp.asarray(ts), data_x, data_y, part_idx,
+                        part_sizes, batch_key, spec=flat_spec, lr=cfg.lr,
+                        local_steps=cfg.local_steps,
+                        batch_size=cfg.batch_size, use_kernel=cfg.use_kernel)
+                plans = plans[run:]
+            if len(plans) == 1:
+                # single-round oracle path: one donated round_step dispatch,
+                # bit-for-bit the pre-horizon engine
+                p = plans[0]
+                w_rows, mix_ids = mixing_rows(p.W, p.active, p.links)
+                train_ids, train_mask = padded_rows(p.active)
+                ctrl = WK.pack_round_ctrl(mix_ids, train_ids, train_mask)
+                buf, _ = WK.round_step(
+                    buf, jnp.asarray(w_rows), jnp.asarray(ctrl),
+                    data_x, data_y, part_idx, part_sizes, batch_key,
+                    np.int32(p.t), spec=flat_spec, lr=cfg.lr,
+                    local_steps=cfg.local_steps, batch_size=cfg.batch_size,
+                    use_kernel=cfg.use_kernel)
+        else:
+            for p in plans:
+                stacked = apply_mixing(jnp.asarray(p.W), stacked,
+                                       use_kernel=cfg.use_kernel)
+                xb, yb = _sample_batches(parts, data, cfg, batch_rng)
+                stacked, _ = WK.local_train(stacked, xb, yb,
+                                            jnp.asarray(p.active),
+                                            lr=cfg.lr,
+                                            local_steps=cfg.local_steps)
 
     hist.setup_wall_s = time.time() - t_wall
-    for t in range(1, cfg.n_rounds + 1):
-        # edge dynamics: workers fail and rejoin (paper's "Edge Dynamic" axis)
-        if cfg.failure_prob > 0:
-            down = ((down & (rng.random(cfg.n_workers) < cfg.failure_persist))
-                    | (~down & (rng.random(cfg.n_workers) < cfg.failure_prob)))
-        up_range = in_range & ~down[None, :] & ~down[:, None]
-
-        # per-round costs (Eq. 7-8 estimate for the coordinator)
-        h_cmp = np.maximum(h_i - time_since_act, 0.0)
-        est_com = np.where(up_range, exp_link_time, 0.0).max(axis=1)
-        round_cost = h_cmp + est_com
-
-        ctx = RoundContext(
-            t=t, round_cost=round_cost, readiness=h_i - time_since_act,
-            in_range=up_range,
-            class_counts=class_counts, phys_dist=net.dist,
-            pull_counts=pull_counts, staleness=st,
-            bandwidth_budget=budget, data_sizes=data_sizes, rng=rng)
-        dec = mechanism.round(ctx)
-        if cfg.failure_prob > 0:
-            # a down worker can neither train nor serve pulls this round
-            dec.active = dec.active & ~down
-            dec.links = dec.links & ~down[None, :] & ~down[:, None]
-
-        # actual round duration with sampled (dynamic) channels
-        raw_link_time = model_bytes / net.link_rates()
-        if dec.synchronous:
-            # a synchronous barrier cannot abort a pull: the aggregation needs
-            # every matched neighbor's model, so deep fades stall the whole
-            # round until retransmission succeeds (the straggler/dynamics cost
-            # the paper measures) — bounded by the stall+retry ceiling
-            link_time = np.minimum(raw_link_time, cfg.sync_link_timeout_s)
-            cmp_part = h_i                                  # full retrain (sync)
-            eligible = np.ones(cfg.n_workers, bool)
-        else:
-            # async pulls degrade gracefully: abort/retry ceiling
-            link_time = np.minimum(raw_link_time, cfg.link_timeout_s)
-            cmp_part = h_cmp
-            eligible = dec.active
-        com_part = np.where(dec.links, link_time, 0.0).max(axis=1)
-        h_t_i = cmp_part + com_part                          # (N,)
-        H_t = float(h_t_i[eligible].max()) if eligible.any() else 0.0
-        sim_clock += H_t
-        hist.round_durations.append(H_t)
-        hist.round_active.append(int(dec.active.sum()))
-
-        # aggregation (Eq. 4) + local update (Eq. 5)
-        W = mixing_matrix(dec.active, dec.links, data_sizes)
-        if cfg.fused_engine:
-            # one donated dispatch: sparse mix + on-device sampling + SGD,
-            # touching only the activated/receiving rows of the flat buffer
-            w_rows, mix_ids = mixing_rows(W, dec.active, dec.links)
-            train_ids, train_mask = padded_rows(dec.active)
-            ctrl = WK.pack_round_ctrl(mix_ids, train_ids, train_mask)
-            buf, _ = WK.round_step(
-                buf, jnp.asarray(w_rows), jnp.asarray(ctrl),
-                data_x, data_y, part_idx, part_sizes, batch_key,
-                np.int32(t), spec=flat_spec, lr=cfg.lr,
-                local_steps=cfg.local_steps, batch_size=cfg.batch_size,
-                use_kernel=cfg.use_kernel)
-        else:
-            stacked = apply_mixing(jnp.asarray(W), stacked,
-                                   use_kernel=cfg.use_kernel)
-            xb, yb = _sample_batches(parts, data, cfg, batch_rng)
-            stacked, _ = WK.local_train(stacked, xb, yb,
-                                        jnp.asarray(dec.active),
-                                        lr=cfg.lr, local_steps=cfg.local_steps)
-
-        # accounting
-        n_transfers = int(dec.links.sum())
-        comm_bytes += n_transfers * model_bytes
-        pull_counts += dec.links
-        time_since_act += H_t
-        time_since_act[dec.active] = 0.0
-        st.advance(dec.active)
+    pending: list[PlannedRound] = []
+    stop = False
+    while planner.t < cfg.n_rounds and not stop:
+        p = planner.plan_round()
+        t = p.t
+        sim_clock = planner.sim_clock
+        hist.round_durations.append(p.duration)
+        hist.round_active.append(int(p.active.sum()))
         if bound_log is not None:
-            bound_log["active"].append(dec.active.copy())
-            bound_log["W"].append(W.copy())
+            bound_log["active"].append(p.active.copy())
+            bound_log["W"].append(p.W.copy())
+        pending.append(p)
 
+        # eval/history points are horizon boundaries: the planner is driven
+        # one round at a time exactly so the chunk is chopped wherever the
+        # per-round loop would have evaluated — histories are identical at
+        # any scan_horizon
         if cfg.max_sim_time is not None:
             grid = cfg.max_sim_time / 12.0
-            crossed = int(sim_clock / grid) > int((sim_clock - H_t) / grid)
-            do_eval = crossed or sim_clock >= cfg.max_sim_time or t == cfg.n_rounds
+            crossed = (int(sim_clock / grid)
+                       > int((sim_clock - p.duration) / grid))
+            do_eval = (crossed or sim_clock >= cfg.max_sim_time
+                       or t == cfg.n_rounds)
+            stop = sim_clock >= cfg.max_sim_time
         else:
             do_eval = t % cfg.eval_every == 0 or t == cfg.n_rounds
+        if do_eval or stop or t == cfg.n_rounds or len(pending) >= horizon:
+            flush(pending)
+            pending = []
         if do_eval:
             # drain queued round dispatches first so their device time is
             # charged to the rounds, not to the eval
             jax.block_until_ready(buf if cfg.fused_engine else stacked)
             t_eval = time.time()
-            eval_models = FS.unflatten(buf, flat_spec) if cfg.fused_engine \
-                else stacked
-            accg, lossg = WK.evaluate_global(eval_models, alpha, x_test, y_test)
-            accl, _ = WK.evaluate_stacked(eval_models, x_test, y_test)
+            if cfg.fused_engine:
+                # flat-native eval: Eq. 11 global model is one alpha @ buf
+                # matvec; no stacked pytree is materialized
+                accg, lossg = WK.evaluate_global_flat(buf, alpha, x_test,
+                                                      y_test, spec=flat_spec)
+                accl, _ = WK.evaluate_stacked_flat(buf, x_test, y_test,
+                                                   spec=flat_spec)
+            else:
+                accg, lossg = WK.evaluate_global(stacked, alpha, x_test,
+                                                 y_test)
+                accl, _ = WK.evaluate_stacked(stacked, x_test, y_test)
             hist.rounds.append(t)
             hist.sim_time.append(sim_clock)
-            hist.comm_gb.append(comm_bytes / 1e9)
+            hist.comm_gb.append(planner.comm_bytes / 1e9)
             hist.acc_global.append(float(accg))
             hist.acc_local.append(float(accl))
             hist.loss_global.append(float(lossg))
-            hist.staleness_avg.append(float(st.tau.mean()))
-            hist.staleness_max.append(int(st.tau.max()))
+            hist.staleness_avg.append(float(planner.st.tau.mean()))
+            hist.staleness_max.append(int(planner.st.tau.max()))
             if (cfg.target_accuracy is not None
                     and hist.completion_time is None
                     and float(accg) >= cfg.target_accuracy):
                 hist.completion_time = sim_clock
-                hist.completion_comm_gb = comm_bytes / 1e9
+                hist.completion_comm_gb = planner.comm_bytes / 1e9
             hist.eval_wall_s += time.time() - t_eval
-        if cfg.max_sim_time is not None and sim_clock >= cfg.max_sim_time:
-            break
 
     hist.wall_s = time.time() - t_wall
     if bound_log is not None:

@@ -114,6 +114,38 @@ def param_bytes(params: Params) -> int:
     return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(params))
 
 
+@functools.partial(jax.jit, static_argnames=("spec",))
+def evaluate_global_flat(buf: jnp.ndarray, alpha: jnp.ndarray,
+                         x: jnp.ndarray, y: jnp.ndarray, *, spec
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Eq. 11 global-model eval straight off the flat (N, P) buffer.
+
+    The global model is one ``alpha @ buf`` matvec + a static unravel — no
+    stacked pytree is materialized, so horizon-boundary evals stay cheap."""
+    gm = FS.unravel_row(FS.weighted_row(buf, alpha), spec)
+    logits = mlp_logits(gm, x)
+    acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+    logp = jax.nn.log_softmax(logits, -1)
+    loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], -1))
+    return acc, loss
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def evaluate_stacked_flat(buf: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray,
+                          *, spec) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean local-model test accuracy + loss, vmapped over the buffer rows."""
+    def one(vec):
+        p = FS.unravel_row(vec, spec)
+        logits = mlp_logits(p, x)
+        acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+        logp = jax.nn.log_softmax(logits, -1)
+        loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], -1))
+        return acc, loss
+
+    accs, losses = jax.vmap(one)(buf)
+    return accs.mean(), losses.mean()
+
+
 # --------------------------------------------------------------------------- #
 # fused, device-resident round engine over the flat (N, P) buffer
 # --------------------------------------------------------------------------- #
@@ -197,6 +229,27 @@ def pack_round_ctrl(mix_row_ids: np.ndarray, train_row_ids: np.ndarray,
                            np.asarray(train_mask, np.int32)])
 
 
+def _mix_train_body(buf: jnp.ndarray, w_rows: jnp.ndarray,
+                    mix_row_ids: jnp.ndarray, train_row_ids: jnp.ndarray,
+                    train_mask: jnp.ndarray, xb, yb, spec: FS.FlatSpec,
+                    lr: float, use_kernel: bool
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mix + masked SGD on pre-sampled batches — the buffer-dependent half of
+    a round, shared by ``round_step`` and ``mega_round_step``'s scan body
+    (batch sampling is buffer-INdependent, so the mega path hoists it out of
+    the scan and draws the whole horizon in one batched op)."""
+    n = buf.shape[0]
+    buf = mix_flat(buf, w_rows, mix_row_ids, use_kernel=use_kernel)
+    losses = jnp.zeros((n,), jnp.float32)
+    if train_row_ids.shape[0] == 0:
+        return buf, losses
+    sub = buf[train_row_ids]                       # (k, P) activated models
+    new_sub, sub_loss = local_sgd_flat(sub, xb, yb, train_mask, spec, lr)
+    buf = buf.at[train_row_ids].set(new_sub)
+    losses = losses.at[train_row_ids].set(sub_loss * train_mask)
+    return buf, losses
+
+
 @functools.partial(jax.jit,
                    static_argnames=("spec", "lr", "local_steps", "batch_size",
                                     "use_kernel"),
@@ -220,23 +273,104 @@ def round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
     Returns (new buffer, per-worker mean loss scattered to (N,), zero for
     idle workers).
     """
-    n = buf.shape[0]
     k_mix = w_rows.shape[0]
     k_train = (ctrl.shape[0] - k_mix) // 2
     mix_row_ids = ctrl[:k_mix]
     train_row_ids = ctrl[k_mix:k_mix + k_train]
     train_mask = ctrl[k_mix + k_train:].astype(jnp.float32)
-    buf = mix_flat(buf, w_rows, mix_row_ids, use_kernel=use_kernel)
-    losses = jnp.zeros((n,), jnp.float32)
-    if k_train == 0:
-        return buf, losses
-    key = jax.random.fold_in(key, t)               # per-round stream, in-jit
-    sub = buf[train_row_ids]                       # (k, P) activated models
-    xb, yb = sample_batches_device(key, train_row_ids, data_x, data_y,
-                                   part_idx[train_row_ids],
-                                   part_sizes[train_row_ids],
-                                   local_steps, batch_size)
-    new_sub, sub_loss = local_sgd_flat(sub, xb, yb, train_mask, spec, lr)
-    buf = buf.at[train_row_ids].set(new_sub)
-    losses = losses.at[train_row_ids].set(sub_loss * train_mask)
-    return buf, losses
+    xb = yb = None
+    if k_train:
+        key = jax.random.fold_in(key, t)           # per-round stream, in-jit
+        xb, yb = sample_batches_device(key, train_row_ids, data_x, data_y,
+                                       part_idx[train_row_ids],
+                                       part_sizes[train_row_ids],
+                                       local_steps, batch_size)
+    return _mix_train_body(buf, w_rows, mix_row_ids, train_row_ids,
+                           train_mask, xb, yb, spec, lr, use_kernel)
+
+
+def pack_horizon(plans, min_bucket: int = 8
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Stack H planned rounds' control tensors for ``mega_round_step``.
+
+    ``plans``: objects with ``.W (N, N)``, ``.active (N,)``, ``.links
+    (N, N)``, ``.t`` (``core.planner.PlannedRound``, duck-typed).  All rounds
+    of a scan chunk must share one shape, so each round is padded to the
+    horizon-wide max of the per-round power-of-two buckets (itself a bucket,
+    keeping the compile count at O(log N) per horizon length).  Padding rows
+    are exact no-ops: identity W rows / zero train masks targeting workers
+    idle in that round.
+
+    Returns ``(w_rows (H, K_mix, N) f32, ctrl (H, K_mix + 2*K_train) i32,
+    ts (H,) i32)`` — three host arrays, so the whole horizon pays three H2D
+    transfers instead of 3·H.
+    """
+    from repro.core.aggregation import mixing_rows, padded_rows, plan_buckets
+
+    n = plans[0].W.shape[0]
+    buckets = [plan_buckets(p.active, p.links, min_bucket) for p in plans]
+    k_mix = max(b[0] for b in buckets)
+    k_train = max(b[1] for b in buckets)
+    h = len(plans)
+    w_rows_h = np.zeros((h, k_mix, n), np.float32)
+    ctrl_h = np.zeros((h, k_mix + 2 * k_train), np.int32)
+    ts = np.zeros((h,), np.int32)
+    for i, p in enumerate(plans):
+        w_rows, mix_ids = mixing_rows(p.W, p.active, p.links, min_bucket,
+                                      pad_to=k_mix)
+        train_ids, train_mask = padded_rows(p.active, min_bucket,
+                                            pad_to=k_train)
+        if k_mix:
+            w_rows_h[i] = w_rows
+        ctrl_h[i] = pack_round_ctrl(mix_ids, train_ids, train_mask)
+        ts[i] = p.t
+    return w_rows_h, ctrl_h, ts
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "lr", "local_steps", "batch_size",
+                                    "use_kernel"),
+                   donate_argnums=(0,))
+def mega_round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
+                    ts: jnp.ndarray, data_x: jnp.ndarray, data_y: jnp.ndarray,
+                    part_idx: jnp.ndarray, part_sizes: jnp.ndarray, key,
+                    *, spec: FS.FlatSpec, lr: float, local_steps: int,
+                    batch_size: int, use_kernel: bool = False
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """H horizon-planned rounds as ONE donated ``lax.scan`` dispatch.
+
+    The control plane is model-value-independent, so ``core.planner`` resolves
+    H rounds of WAA/PTCA/staleness bookkeeping on host and this scan replays
+    them back-to-back on device — one dispatch + three H2D transfers per
+    horizon instead of per round, which is the entire host↔device round-trip
+    cost of the steady regime.  Inputs are the ``pack_horizon`` stacks:
+    ``w_rows (H, K_mix, N)``, ``ctrl (H, K_mix + 2*K_train)``, ``ts (H,)``
+    round indices.
+
+    Batch sampling is buffer-independent, so the whole horizon's minibatches
+    are drawn OUTSIDE the scan as one batched op (each round still keyed by
+    fold_in(key, t) + per-worker fold_in, exactly like ``round_step``, so any
+    horizon split yields bit-identical buffers); only the mix + SGD — the
+    part that actually depends on the evolving buffer — runs per scan step.
+    Returns (new buffer, (H, N) per-round losses).
+    """
+    k_mix = w_rows.shape[1]
+    k_train = (ctrl.shape[1] - k_mix) // 2
+    mix_ids = ctrl[:, :k_mix]                                   # (H, k_mix)
+    train_ids = ctrl[:, k_mix:k_mix + k_train]                  # (H, k_train)
+    masks = ctrl[:, k_mix + k_train:].astype(jnp.float32)       # (H, k_train)
+    if k_train:
+        keys = jax.vmap(jax.random.fold_in, (None, 0))(key, ts)
+        xb, yb = jax.vmap(
+            lambda k, ids: sample_batches_device(
+                k, ids, data_x, data_y, part_idx[ids], part_sizes[ids],
+                local_steps, batch_size))(keys, train_ids)
+    else:
+        xb = yb = jnp.zeros((ts.shape[0],), jnp.float32)        # scan filler
+
+    def body(b, xs):
+        w, mids, tids, mask, x, y = xs
+        return _mix_train_body(b, w, mids, tids, mask, x, y, spec, lr,
+                               use_kernel)
+
+    return jax.lax.scan(body, buf, (w_rows, mix_ids, train_ids, masks, xb, yb))
