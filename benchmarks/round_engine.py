@@ -1,20 +1,31 @@
-"""Fused round engine: legacy vs single-round dispatch vs scan mega-rounds.
+"""Fused round engine: legacy vs single-round dispatch vs scan mega-rounds
+vs the PR 3 column-sparse + fused-SGD engine.
 
-Three layers are measured at N=100 workers, steady partial activation
-(DySTop, ``max_workers=16`` — the regime the mechanism targets):
+Four layers are measured at N=100 workers, steady partial activation
+(DySTop — the regime the mechanism targets):
 
 * legacy vs fused (``scan_horizon=1``) — PR 1's comparison: per-leaf mixing
   dispatches + host batch loop vs ONE donated ``round_step`` jit per round.
 * fused vs scan (``scan_horizon=8``) — end-to-end simulations at the default
   model scale; here the model plane (16 workers x 2 SGD steps) dominates, so
-  amortizing dispatch buys a bounded win.
+  amortizing dispatch buys a bounded win.  The PR 2 engine (row-sparse mix +
+  per-step AD SGD, ``col_sparse_mix=False, fused_local_sgd=False``) is kept
+  as a row so the new-engine speedup is tracked end to end.
+* mix plane — ``mix_flat`` (row-sparse (k, N) @ (N, P)) vs ``mix_flat_cols``
+  (gather-union (k, u) @ (u, P)) on a real steady-regime W at the edge-proxy
+  model scale, buffers donated exactly like the engine's round dispatch.
+  Column sparsity wins where the mix is memory-bound on small models; at the
+  default model scale with a near-full union the simulator falls back to the
+  row-sparse path host-side (u = N never pays the slab gather).
 * dispatch plane — the horizon scheduler's actual target: the same steady
   control trajectory executed with per-round ``round_step`` dispatches vs
   ``mega_round_step`` scans over a paper-testbed-scale edge model proxy
   (the Jetson-class CNNs of the paper and the large-N DFL deployment
   regimes are tiny per-worker models, where per-round dispatch IS the
   cost).  Host planning is identical in both paths and excluded; this is
-  rounds/sec of the engine itself.
+  rounds/sec of the engine itself.  The ``max_workers=8`` mix-dominated
+  variant additionally runs the PR 3 engine (column-sparse + fused SGD) on
+  the SAME plans — the ≥1.5x engine-speedup acceptance row.
 
     PYTHONPATH=src python -m benchmarks.round_engine
     PYTHONPATH=src python -m benchmarks.run --only round_engine --quick
@@ -28,7 +39,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import mixing_rows, padded_rows
+from repro.core.aggregation import (mixing_rows, mixing_rows_cols,
+                                    padded_rows, plan_buckets_cols)
 from repro.core.planner import HorizonPlanner
 from repro.core.protocol import DySTop
 from repro.data.partition import dirichlet_partition
@@ -43,10 +55,13 @@ from benchmarks.common import emit
 
 
 def _cfg(rounds: int, workers: int, fused: bool, use_kernel: bool = False,
-         scan_horizon: int = 1) -> SimConfig:
+         scan_horizon: int = 1, col_sparse_mix: bool = True,
+         fused_local_sgd: bool = True) -> SimConfig:
     return SimConfig(n_workers=workers, n_rounds=rounds, phi=0.5, lr=0.1,
                      eval_every=rounds, seed=0, fused_engine=fused,
-                     use_kernel=use_kernel, scan_horizon=scan_horizon)
+                     use_kernel=use_kernel, scan_horizon=scan_horizon,
+                     col_sparse_mix=col_sparse_mix,
+                     fused_local_sgd=fused_local_sgd)
 
 
 def _mech(max_workers: Optional[int]) -> DySTop:
@@ -55,37 +70,31 @@ def _mech(max_workers: Optional[int]) -> DySTop:
 
 def _us_per_round(rounds: int, workers: int, fused: bool,
                   max_workers: Optional[int], use_kernel: bool = False,
-                  scan_horizon: int = 1, reps: int = 3) -> float:
+                  scan_horizon: int = 1, reps: int = 3,
+                  col_sparse_mix: bool = True,
+                  fused_local_sgd: bool = True) -> float:
     # warmup run (full length, so both PTCA phases and every active-row shape
     # bucket get compiled), then per-round cost from `wall_s - eval_wall_s -
     # setup_wall_s` (the simulator separates eval passes and one-time setup
     # from round work, syncing queued dispatches before evals so device time
     # is charged to the rounds).  Best of `reps` runs: the floor is robust to
     # scheduler noise on small boxes.
-    run_simulation(_mech(max_workers),
-                   _cfg(rounds, workers, fused, use_kernel, scan_horizon))
+    kw = dict(use_kernel=use_kernel, scan_horizon=scan_horizon,
+              col_sparse_mix=col_sparse_mix, fused_local_sgd=fused_local_sgd)
+    run_simulation(_mech(max_workers), _cfg(rounds, workers, fused, **kw))
 
     def one() -> float:
         h = run_simulation(_mech(max_workers),
-                           _cfg(rounds, workers, fused, use_kernel,
-                                scan_horizon))
+                           _cfg(rounds, workers, fused, **kw))
         return (h.wall_s - h.eval_wall_s - h.setup_wall_s) / rounds * 1e6
 
     return min(one() for _ in range(reps))
 
 
-def _dispatch_plane(workers: int, horizon: int = 8, n_plan: int = 48,
-                    dim: int = 8, hidden: int = 8, batch: int = 8,
-                    steps: int = 1, reps: int = 12) -> tuple:
-    """Steady-regime control trajectory executed per-round vs as mega-rounds.
-
-    Plans ``n_plan`` rounds of REAL DySTop control (WAA + PTCA over a real
-    edge network) once with the horizon planner, then times only the model
-    plane: per-round ``round_step`` dispatches vs ``mega_round_step`` scans
-    of ``horizon`` rounds, over an edge-proxy model (P ~ ``dim*hidden`` —
-    the paper-testbed / large-N regime where dispatch dominates).  Returns
-    (us/round single, us/round mega).
-    """
+def _steady_env(workers: int, dim: int, hidden: int, max_workers: int,
+                n_plan: int, bucket_cols: bool = True):
+    """Plan a bucket-uniform steady DySTop control run + the flat-buffer
+    model-plane inputs, shared by the mix-plane and dispatch-plane benches."""
     rng = np.random.default_rng(0)
     full = make_classification(8000, dim, seed=0)
     data, _ = train_test_split(full, 0.2, seed=0)
@@ -95,32 +104,135 @@ def _dispatch_plane(workers: int, horizon: int = 8, n_plan: int = 48,
     h_i = heterogeneous_compute_times(workers, 1.0, rng, sigma=0.75)
     model_bytes = 4 * dim * hidden * 25.0
     planner = HorizonPlanner(
-        _mech(16), h_i=h_i, in_range=net.in_range(),
+        _mech(max_workers), h_i=h_i, in_range=net.in_range(),
         exp_link_time=net.expected_link_time(model_bytes),
         model_bytes=model_bytes, class_counts=class_counts,
         data_sizes=data_sizes, net=net, rng=rng, tau_bound=5,
         bandwidth_budget=8.0, link_timeout_s=5.0, sync_link_timeout_s=30.0)
     plans = planner.plan(n_plan)
     # drop the burn-in, keep a bucket-uniform steady run so the mega path is
-    # whole scan chunks (run_simulation splits chunks the same way)
+    # whole scan chunks (run_simulation splits chunks the same way; with
+    # ``bucket_cols`` the key includes the column-union bucket so the
+    # column-sparse engine sees uniform (k, u) shapes too)
     from repro.core.aggregation import plan_buckets
 
-    plans = [p for p in plans[8:] if plan_buckets(p.active, p.links)
-             == plan_buckets(plans[8].active, plans[8].links)]
-    plans = plans[: len(plans) // horizon * horizon]
-    assert len(plans) >= horizon, f"steady run too short: {len(plans)}"
+    key_fn = plan_buckets_cols if bucket_cols else plan_buckets
+    plans = [p for p in plans[8:] if key_fn(p.active, p.links)
+             == key_fn(plans[8].active, plans[8].links)]
 
     stacked = WK.init_stacked(jax.random.PRNGKey(0), workers, dim, hidden,
                               data.n_classes)
     buf, spec = FS.flatten_stacked(stacked)
-    data_x = jnp.asarray(data.x)
-    data_y = jnp.asarray(data.y)
     max_part = max(len(p) for p in parts)
     part_idx = np.zeros((workers, max_part), np.int32)
     for i, p in enumerate(parts):
         part_idx[i, :len(p)] = p
-    part_idx = jnp.asarray(part_idx)
-    part_sizes = jnp.asarray(data_sizes.astype(np.int32))
+    return (plans, buf, spec, jnp.asarray(data.x), jnp.asarray(data.y),
+            jnp.asarray(part_idx), jnp.asarray(data_sizes.astype(np.int32)))
+
+
+def _mix_plane(workers: int, dim: int = 8, hidden: int = 8,
+               max_workers: int = 8, reps: int = 200) -> tuple:
+    """Row-sparse vs column-sparse mix on a real steady W, donated buffers.
+
+    The mix-dominated regime: N=100, steady partial activation with a
+    bounded neighborhood (k=8 rows, union u=64 < N columns), edge-proxy
+    model scale.  Both paths include the scatter-back, exactly the engine's
+    per-round mix.  Returns (us row-sparse, us column-sparse).
+
+    Expectation management: the contraction drops k·N·P -> k·u·P flops and
+    buffer-read traffic, but on CPU one dense skinny BLAS gemm is extremely
+    efficient and the jnp lowering pays the union gather as a separate slab
+    copy — measured parity-to-modest-win at N=100.  The TPU Pallas kernel
+    (``aggregate_rows_cols``) is where the cut shows up as HBM traffic: the
+    (u, P) slab streams through VMEM panels instead of all N rows.  The
+    simulator's host-side u = N fallback guarantees the column path is never
+    a pessimization.
+    """
+    import functools
+
+    plans, buf, _, _, _, _, _ = _steady_env(workers, dim, hidden,
+                                            max_workers, 48)
+    p = plans[0]
+    w_rows, mix_ids = mixing_rows(p.W, p.active, p.links)
+    w_sub, mix_ids2, col_ids = mixing_rows_cols(p.W, p.active, p.links)
+    jr = (jnp.asarray(w_rows), jnp.asarray(mix_ids))
+    jc = (jnp.asarray(w_sub), jnp.asarray(mix_ids2), jnp.asarray(col_ids))
+
+    @functools.partial(jax.jit, donate_argnums=0)
+    def rows(b):
+        return WK.mix_flat(b, *jr)
+
+    @functools.partial(jax.jit, donate_argnums=0)
+    def cols(b):
+        return WK.mix_flat_cols(b, *jc)
+
+    best = {}
+    for name, fn in (("rows", rows), ("cols", cols)):
+        jax.block_until_ready(fn(jnp.array(buf)))       # compile
+        t_best = float("inf")
+        for _ in range(reps):
+            b = jnp.array(buf)
+            jax.block_until_ready(b)
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(b))
+            t_best = min(t_best, time.perf_counter() - t0)
+        best[name] = t_best * 1e6
+    return best["rows"], best["cols"]
+
+
+def _sgd_plane(k: int = 16, dim: int = 32, hidden: int = 64, ncls: int = 10,
+               steps: int = 2, batch: int = 32, reps: int = 60) -> tuple:
+    """Per-step AD scan vs the fused unrolled lowering, default model scale.
+
+    Times ONLY the local-SGD jit over the gathered active rows (k workers x
+    ``local_steps`` — the simulator's default shapes), isolating the
+    tentpole's second half from host planning and dispatch noise.  Returns
+    (us AD oracle, us fused).
+    """
+    stacked = WK.init_stacked(jax.random.PRNGKey(0), k, dim, hidden, ncls,
+                              same_init=False)
+    buf, spec = FS.flatten_stacked(stacked)
+    kx, ky = jax.random.split(jax.random.PRNGKey(1))
+    xb = jax.random.normal(kx, (k, steps, batch, dim), jnp.float32)
+    yb = jax.random.randint(ky, (k, steps, batch), 0, ncls)
+    act = jnp.ones((k,), jnp.float32)
+    fns = {
+        "ad": jax.jit(lambda b: WK.local_sgd_flat(b, xb, yb, act, spec,
+                                                  0.05)[0]),
+        "fused": jax.jit(lambda b: WK.local_sgd_flat_fused(
+            b, xb, yb, act, spec, 0.05, with_losses=False)[0]),
+    }
+    best = {n: float("inf") for n in fns}
+    for fn in fns.values():
+        jax.block_until_ready(fn(buf))              # compile
+    for _ in range(reps):                           # interleaved best-of
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(buf))
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return best["ad"] * 1e6, best["fused"] * 1e6
+
+
+def _dispatch_plane(workers: int, horizon: int = 8, n_plan: int = 48,
+                    dim: int = 8, hidden: int = 8, batch: int = 8,
+                    steps: int = 1, reps: int = 12, max_workers: int = 16,
+                    sparse_variant: bool = False) -> dict:
+    """Steady-regime control trajectory executed per-round vs as mega-rounds.
+
+    Plans ``n_plan`` rounds of REAL DySTop control (WAA + PTCA over a real
+    edge network) once with the horizon planner, then times only the model
+    plane: per-round ``round_step`` dispatches vs ``mega_round_step`` scans
+    of ``horizon`` rounds, over an edge-proxy model (P ~ ``dim*hidden`` —
+    the paper-testbed / large-N regime where dispatch dominates).  With
+    ``sparse_variant`` the PR 3 engine (column-sparse mix + fused SGD) runs
+    the SAME plans as a third contender.  Returns a dict of us/round.
+    """
+    plans, buf, spec, data_x, data_y, part_idx, part_sizes = _steady_env(
+        workers, dim, hidden, max_workers, n_plan,
+        bucket_cols=sparse_variant)
+    plans = plans[: len(plans) // horizon * horizon]
+    assert len(plans) >= horizon, f"steady run too short: {len(plans)}"
     key = jax.random.PRNGKey(1)
     kw = dict(spec=spec, lr=0.05, local_steps=steps, batch_size=batch)
 
@@ -142,20 +254,39 @@ def _dispatch_plane(workers: int, horizon: int = 8, n_plan: int = 48,
                                       part_idx, part_sizes, key, **kw)
         return b
 
-    state = {name: jnp.array(buf) for name in ("single", "mega")}
-    best = {name: float("inf") for name in state}
-    for name, fn in (("single", single_all), ("mega", mega_all)):
+    def mega_sparse_all(b):
+        # the full PR 3 dispatch exactly as run_simulation issues it:
+        # column-sparse mix + fused SGD + loss skip + mix-rows==train-rows
+        for i in range(0, len(plans), horizon):
+            chunk = plans[i:i + horizon]
+            mit = all(not (p.links.any(axis=1) & ~p.active).any()
+                      for p in chunk)
+            w, c, ts = WK.pack_horizon(chunk, col_sparse=True)
+            b, _ = WK.mega_round_step(b, jnp.asarray(w), jnp.asarray(c),
+                                      jnp.asarray(ts), data_x, data_y,
+                                      part_idx, part_sizes, key,
+                                      col_sparse=True, fused_sgd=True,
+                                      with_losses=False, mix_is_train=mit,
+                                      **kw)
+        return b
+
+    variants = [("single", single_all), ("mega", mega_all)]
+    if sparse_variant:
+        variants.append(("mega_sparse", mega_sparse_all))
+    state = {name: jnp.array(buf) for name, _ in variants}
+    best = {name: float("inf") for name, _ in variants}
+    for name, fn in variants:
         state[name] = fn(state[name])
         jax.block_until_ready(state[name])  # compile warmup
     # interleave the timed reps so load spikes on small shared boxes hit both
     # paths alike; best-of is then a fair floor for each
     for _ in range(reps):
-        for name, fn in (("single", single_all), ("mega", mega_all)):
+        for name, fn in variants:
             t0 = time.time()
             state[name] = fn(state[name])
             jax.block_until_ready(state[name])
             best[name] = min(best[name], (time.time() - t0) / len(plans) * 1e6)
-    return best["single"], best["mega"]
+    return best
 
 
 def main(rounds: int = 80, workers: int = 100) -> None:
@@ -165,30 +296,81 @@ def main(rounds: int = 80, workers: int = 100) -> None:
     emit(f"round_engine/legacy_{workers}w", legacy,
          "per-leaf mix + host batch loop + all-workers train jit")
     emit(f"round_engine/fused_{workers}w", fused,
-         "one donated dispatch per round (scan_horizon=1; PR 1 engine)")
+         "one donated dispatch per round (scan_horizon=1)")
     emit(f"round_engine/speedup_{workers}w", legacy / fused,
          f"fused is {legacy / fused:.2f}x faster per simulated round")
     scan = _us_per_round(rounds, workers, fused=True, max_workers=16,
                          scan_horizon=8)
     emit(f"round_engine/fused_scan8_{workers}w", scan,
-         "horizon-planned lax.scan mega-rounds (scan_horizon=8), end-to-end")
+         "mega-rounds + column-sparse mix + fused SGD (the default engine)")
     emit(f"round_engine/scan_speedup_{workers}w", fused / scan,
          f"end-to-end {fused / scan:.2f}x vs per-round dispatch (model plane "
          f"dominates at default scale)")
+    # PR 2 engine (row-sparse mix + per-step AD SGD) on the same trajectory:
+    # the end-to-end baseline the new default engine is tracked against
+    scan_pr2 = _us_per_round(rounds, workers, fused=True, max_workers=16,
+                             scan_horizon=8, col_sparse_mix=False,
+                             fused_local_sgd=False)
+    emit(f"round_engine/fused_scan8_pr2_{workers}w", scan_pr2,
+         "PR 2 engine: mega-rounds with row-sparse mix + AD-scan SGD")
+    emit(f"round_engine/engine_speedup_{workers}w", scan_pr2 / scan,
+         f"new engine is {scan_pr2 / scan:.2f}x end-to-end at the default "
+         f"model scale (SGD-bound; fused SGD is the lever here).  NB: the "
+         f"flags-off baseline shares PR 3's faster planner — vs the actual "
+         f"PR 2 commit the gap is wider")
+    # SGD plane: the fused unrolled lowering vs the per-step AD scan at the
+    # simulator's default shapes (k=16 x 2 steps x batch 32)
+    sgd_ad, sgd_fused = _sgd_plane()
+    emit(f"round_engine/sgd_ad_{workers}w", sgd_ad,
+         "per-step AD lax.scan local SGD (PR 2 lowering), k=16 x 2 steps")
+    emit(f"round_engine/sgd_fused_{workers}w", sgd_fused,
+         "fused unrolled manual-backward SGD (the default lowering)")
+    emit(f"round_engine/sgd_lowering_speedup_{workers}w", sgd_ad / sgd_fused,
+         f"fused local-steps SGD is {sgd_ad / sgd_fused:.2f}x the AD scan "
+         f"on the gathered active rows")
+    # mix plane: row-sparse vs column-sparse contraction on a real steady W
+    # (k=8 active rows, u=64-column union < N=100), edge-proxy model scale
+    mix_r, mix_c = _mix_plane(workers)
+    emit(f"round_engine/mix_rows_{workers}w", mix_r,
+         "row-sparse mix_flat: (k, N) @ (N, P) + scatter, donated buffer")
+    emit(f"round_engine/mix_cols_{workers}w", mix_c,
+         "column-sparse mix_flat_cols: gather-union (k, u) @ (u, P)")
+    emit(f"round_engine/mix_cols_speedup_{workers}w", mix_r / mix_c,
+         f"column-sparse mix is {mix_r / mix_c:.2f}x on CPU BLAS "
+         f"(N={workers} steady, edge-proxy model; flops drop k*N*P -> "
+         f"k*u*P — the traffic win lands on TPU where the Pallas kernel "
+         f"streams the (u, P) slab through VMEM)")
     # dispatch plane: same steady control, edge-proxy model — the horizon
     # scheduler's target regime (paper-testbed-scale workers, large-N sims)
-    single_d, mega_d = _dispatch_plane(workers, horizon=16, n_plan=80)
-    emit(f"round_engine/dispatch_single_{workers}w", single_d,
+    d16 = _dispatch_plane(workers, horizon=16, n_plan=80)
+    emit(f"round_engine/dispatch_single_{workers}w", d16["single"],
          "steady control executed as per-round round_step dispatches")
-    emit(f"round_engine/dispatch_scan16_{workers}w", mega_d,
+    emit(f"round_engine/dispatch_scan16_{workers}w", d16["mega"],
          "same rounds as lax.scan mega-rounds (sampling hoisted off the scan)")
-    emit(f"round_engine/dispatch_scan_speedup_{workers}w", single_d / mega_d,
-         f"mega-rounds are {single_d / mega_d:.2f}x rounds/sec at the "
-         f"dispatch plane (edge-proxy model, N={workers} steady, horizon 16)")
+    emit(f"round_engine/dispatch_scan_speedup_{workers}w",
+         d16["single"] / d16["mega"],
+         f"mega-rounds are {d16['single'] / d16['mega']:.2f}x rounds/sec at "
+         f"the dispatch plane (edge-proxy model, N={workers} steady, "
+         f"horizon 16)")
+    # mix-dominated dispatch plane (max_workers=8 ⇒ union u=64 < N): the PR 3
+    # engine (column-sparse + fused SGD) vs the PR 2 mega path on SAME plans
+    d8 = _dispatch_plane(workers, horizon=16, n_plan=96, max_workers=8,
+                         sparse_variant=True)
+    emit(f"round_engine/dispatch_scan16_pr2mix_{workers}w", d8["mega"],
+         "PR 2 mega-rounds (row-sparse mix + AD SGD), mix-dominated regime")
+    emit(f"round_engine/dispatch_scan16_sparse_{workers}w", d8["mega_sparse"],
+         "PR 3 mega-rounds (column-sparse mix + fused SGD), same plans")
+    emit(f"round_engine/engine_scan_speedup_{workers}w",
+         d8["mega"] / d8["mega_sparse"],
+         f"new engine mega-rounds vs the PR 2 mega path on the same plans: "
+         f"{d8['mega'] / d8['mega_sparse']:.2f}x (N={workers} steady, "
+         f"edge-proxy model — dispatch-overhead-bound, so the lowering wins "
+         f"show up at the default model scale instead)")
     fused_k = _us_per_round(rounds, workers, fused=True, max_workers=16,
                             use_kernel=True)
     emit(f"round_engine/fused_kernel_{workers}w", fused_k,
-         "fused + Pallas aggregate_rows (interpret mode on CPU; compiles on TPU)")
+         "fused + Pallas aggregate kernels (interpret mode on CPU; compiles "
+         "on TPU)")
     # secondary: uncapped bursty activation (all-N flush rounds bound the win;
     # bucket changes every round, so scan chunks degrade to single dispatches)
     legacy_b = _us_per_round(rounds, workers, fused=False, max_workers=None)

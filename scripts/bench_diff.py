@@ -1,0 +1,67 @@
+#!/usr/bin/env python
+"""Warn-only diff of a fresh benchmark ``--json`` run against the committed
+``BENCH_*.json`` baseline (see docs/BENCHMARKS.md).
+
+    python scripts/bench_diff.py BENCH_round_engine.json fresh.json \
+        [--warn-pct 30]
+
+Rows are matched by name.  ``*_speedup`` rows (unitless ratios) are compared
+as absolute ratios; ``us_per_call`` rows as relative change (lower is
+better).  Exits 0 ALWAYS — shared-runner numbers are noisy, so regressions
+are surfaced in the log, never used to fail the build.  Missing rows (bench
+renamed/added) are listed informationally.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: r["us_per_call"] for r in payload.get("results", [])}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument("--warn-pct", type=float, default=30.0,
+                    help="flag changes beyond this percentage")
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    fresh = load(args.fresh)
+    warned = 0
+    print(f"{'row':<44} {'baseline':>10} {'fresh':>10} {'delta':>8}")
+    for name in sorted(base):
+        if name not in fresh:
+            print(f"{name:<44} {base[name]:>10.1f} {'MISSING':>10}")
+            continue
+        b, f = base[name], fresh[name]
+        if b <= 0:
+            continue
+        if "speedup" in name.rsplit("/", 1)[-1]:   # ratio row: higher = better
+            delta = (f - b) / b * 100.0
+            worse = delta < -args.warn_pct
+        else:
+            delta = (f - b) / b * 100.0          # us rows: lower = better
+            worse = delta > args.warn_pct
+        flag = "  << WARN" if worse else ""
+        warned += bool(worse)
+        print(f"{name:<44} {b:>10.1f} {f:>10.1f} {delta:>+7.1f}%{flag}")
+    for name in sorted(set(fresh) - set(base)):
+        print(f"{name:<44} {'NEW':>10} {fresh[name]:>10.1f}")
+    if warned:
+        print(f"\n{warned} row(s) beyond +/-{args.warn_pct:.0f}% "
+              f"(warn-only: shared-runner noise is expected; investigate if "
+              f"it persists across runs)")
+    else:
+        print("\nno regressions beyond the warn threshold")
+    return 0                                      # never fail the build
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,84 @@
+#!/usr/bin/env python
+"""Fail on broken RELATIVE links in the repo's markdown docs (CI gate).
+
+    python scripts/check_links.py README.md docs CHANGES.md ...
+
+Checks every ``[text](target)`` and bare ``[[target]]`` style reference in
+the given markdown files (directories are scanned recursively for ``*.md``):
+a relative target must exist on disk, and a ``#fragment`` on a relative
+markdown target must match a heading anchor in that file.  External links
+(http/https/mailto) are NOT fetched — the CI container is offline; they are
+only syntax-checked.  Exit code 1 if anything is broken.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(
+    r"(?<!\!)\[(?P<text>[^\]]*)\]\((?P<target>[^)\s]+)(?:\s+\"[^\"]*\")?\)")
+IMG_RE = re.compile(
+    r"\!\[(?P<text>[^\]]*)\]\((?P<target>[^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#+\s+(?P<h>.+?)\s*$", re.M)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.S)
+
+
+def anchor_of(heading: str) -> str:
+    """GitHub-style anchor: lowercase, spaces -> dashes, drop punctuation."""
+    a = heading.strip().lower()
+    a = re.sub(r"[`*_~]", "", a)
+    a = re.sub(r"[^\w\s-]", "", a, flags=re.UNICODE)
+    return re.sub(r"\s+", "-", a).strip("-")
+
+
+def headings(path: Path) -> set:
+    text = path.read_text(encoding="utf-8")
+    text = CODE_FENCE_RE.sub("", text)
+    return {anchor_of(m.group("h")) for m in HEADING_RE.finditer(text)}
+
+
+def check_file(path: Path) -> list:
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    text = CODE_FENCE_RE.sub("", text)           # links inside code are prose
+    for m in list(LINK_RE.finditer(text)) + list(IMG_RE.finditer(text)):
+        target = m.group("target")
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        base, _, frag = target.partition("#")
+        if base:
+            dest = (path.parent / base).resolve()
+            if not dest.exists():
+                errors.append(f"{path}: broken link -> {target}")
+                continue
+        else:
+            dest = path                           # same-file #fragment
+        if frag and dest.suffix == ".md":
+            if anchor_of(frag) not in headings(dest):
+                errors.append(f"{path}: missing anchor -> {target}")
+    return errors
+
+
+def main(argv: list) -> int:
+    files: list = []
+    for arg in argv or ["README.md", "docs"]:
+        p = Path(arg)
+        if p.is_dir():
+            files += sorted(p.rglob("*.md"))
+        elif p.exists():
+            files.append(p)
+        else:
+            print(f"check_links: no such path {arg}", file=sys.stderr)
+            return 1
+    errors = []
+    for f in files:
+        errors += check_file(f)
+    for e in errors:
+        print(e)
+    print(f"check_links: {len(files)} file(s), {len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -16,6 +16,13 @@ fused round engine only computes the k non-identity rows: ``mixing_rows``
 gathers them (padded to a small set of shape buckets to bound jit
 recompilations) and the ``aggregate_rows`` kernel does the (k, N) @ (N, P)
 skinny matmul, scattered back into the flat buffer.
+
+Column sparsity (the default engine path): each mixing row also has at most
+max_neighbors+1 nonzero COLUMNS, so the k rows jointly touch only the union
+of their nonzero columns — ``mixing_rows_cols`` restricts the gathered rows
+to that u-column union (``col_union_mask``), cutting the contraction to
+(k, u) @ (u, P) with u <= k*(max_neighbors+1); ``plan_buckets_cols`` is the
+matching chunk-split key for ``lax.scan`` horizons.
 """
 from __future__ import annotations
 
@@ -41,14 +48,20 @@ def mixing_matrix(active: np.ndarray, links: np.ndarray,
     active = np.asarray(active, bool)
     links = np.asarray(links, bool)
     n = len(active)
-    eye = np.eye(n, dtype=bool)
-    members = links | eye                       # in-neighbors + self, all rows
-    d = np.asarray(data_sizes, np.float64)
-    Wd = np.where(members, d[None, :], 0.0)
-    Wd /= Wd.sum(axis=1, keepdims=True)
     mixing_rows_mask = active | links.any(axis=1)
-    W = np.where(mixing_rows_mask[:, None], Wd, eye)
-    return W.astype(np.float32)
+    rows = np.flatnonzero(mixing_rows_mask)
+    # only the k non-identity rows carry Eq. 4 weights; identity rows are
+    # emitted directly, so the normalization runs on (k, N) instead of (N, N)
+    # — bitwise-identical values row-by-row (per-round hot path)
+    W = np.eye(n, dtype=np.float32)
+    if len(rows):
+        d = np.asarray(data_sizes, np.float64)
+        members = links[rows]
+        members[np.arange(len(rows)), rows] = True  # in-neighbors + self
+        Wd = np.where(members, d[None, :], 0.0)
+        Wd /= Wd.sum(axis=1, keepdims=True)
+        W[rows] = Wd.astype(np.float32)
+    return W
 
 
 def bucket_size(k: int, n: int, min_bucket: int = 8) -> int:
@@ -77,6 +90,44 @@ def plan_buckets(active: np.ndarray, links: np.ndarray,
     n = len(active)
     return (bucket_size(int((active | links.any(axis=1)).sum()), n, min_bucket),
             bucket_size(int(active.sum()), n, min_bucket))
+
+
+def col_union_mask(active: np.ndarray, links: np.ndarray) -> np.ndarray:
+    """(N,) bool: the union of nonzero mixing-matrix COLUMNS this round.
+
+    Row i of W (Eq. 4) is nonzero exactly on {i} ∪ {j : links[i, j]} when i
+    mixes (``active[i] | links[i].any()``) and on {i} otherwise.  The union
+    over the non-identity rows is therefore ``mix_mask | links.any(0)``
+    (sources pulled from need not be mix rows themselves).  Whenever an idle
+    worker exists, the first idle index is ALSO included so that row-bucket
+    padding — which replicates that worker's identity row — stays exact
+    under the column restriction (e_idle restricted to the union must still
+    pick out X[idle]).  Model-value-independent, so the planner can resolve
+    it arbitrarily far ahead of the device.
+    """
+    active = np.asarray(active, bool)
+    links = np.asarray(links, bool)
+    mix_mask = active | links.any(axis=1)
+    cols = mix_mask | links.any(axis=0)
+    if mix_mask.any() and not mix_mask.all():
+        cols = cols.copy()
+        cols[np.flatnonzero(~mix_mask)[0]] = True   # row-padding identity col
+    return cols
+
+
+def plan_buckets_cols(active: np.ndarray, links: np.ndarray,
+                      min_bucket: int = 8) -> Tuple[int, int, int]:
+    """(k_mix, k_train, u_cols) shape buckets for the column-sparse engine.
+
+    Extends ``plan_buckets`` with the power-of-two bucket of the mixing
+    column union (``col_union_mask``); the simulator's chunk splitter keys on
+    the full triple so every round of a ``lax.scan`` chunk shares one
+    (k_mix, u) contraction shape.
+    """
+    k_mix, k_train = plan_buckets(active, links, min_bucket)
+    n = len(np.asarray(active, bool))
+    u = bucket_size(int(col_union_mask(active, links).sum()), n, min_bucket)
+    return (k_mix, k_train, u)
 
 
 def padded_rows(mask: np.ndarray, min_bucket: int = 8,
@@ -121,6 +172,51 @@ def mixing_rows(W: np.ndarray, active: np.ndarray, links: np.ndarray,
     row_ids, _ = padded_rows(active | links.any(axis=1), min_bucket, pad_to)
     return (np.ascontiguousarray(W[row_ids], np.float32) if len(row_ids)
             else np.zeros((0, len(active)), np.float32)), row_ids
+
+
+def mixing_rows_cols(W: np.ndarray, active: np.ndarray, links: np.ndarray,
+                     min_bucket: int = 8, pad_to: int | None = None,
+                     col_pad_to: int | None = None,
+                     cols_mask: np.ndarray | None = None
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Gather the non-identity rows of W restricted to their column union.
+
+    The column-sparse companion of ``mixing_rows``: returns ``(W_sub
+    (k_pad, u_pad) f32, row_ids (k_pad,) i32, col_ids (u_pad,) i32)`` where
+    ``col_ids`` is the ``col_union_mask`` union bucketed by ``bucket_size``
+    (``col_pad_to`` overrides, for horizon packing; ``cols_mask`` passes a
+    precomputed union — e.g. ``PlannedRound.mix_cols``, resolved by the
+    horizon planner ahead of dispatch).  Column padding repeats
+    index 0 but the matching W_sub columns are ZEROED, so padded columns
+    contribute exactly 0 to the contraction; row padding replicates an idle
+    worker's identity row exactly as in ``mixing_rows`` (its column is a
+    member of the union by construction).  When the union bucket reaches N
+    the gather degenerates to ``col_ids = arange(N)`` — the row-sparse
+    contraction with an extra no-op gather.
+    """
+    active = np.asarray(active, bool)
+    links = np.asarray(links, bool)
+    n = len(active)
+    row_ids, _ = padded_rows(active | links.any(axis=1), min_bucket, pad_to)
+    if len(row_ids) == 0:
+        return (np.zeros((0, 0), np.float32), row_ids,
+                np.zeros((0,), np.int32))
+    if cols_mask is None:
+        cols_mask = col_union_mask(active, links)
+    cols = np.flatnonzero(cols_mask)
+    u = len(cols)
+    u_pad = bucket_size(u, n, min_bucket) if col_pad_to is None \
+        else int(col_pad_to)
+    if u_pad >= n:
+        u_pad = n
+        col_ids = np.arange(n, dtype=np.int32)
+        u = n
+    else:
+        col_ids = np.concatenate(
+            [cols, np.zeros(u_pad - u, cols.dtype)]).astype(np.int32)
+    W_sub = np.ascontiguousarray(W[np.ix_(row_ids, col_ids)], np.float32)
+    W_sub[:, u:] = 0.0                     # padded columns contribute nothing
+    return W_sub, row_ids, col_ids
 
 
 def apply_mixing(W: jnp.ndarray, stacked_models: Any, use_kernel: bool = True) -> Any:

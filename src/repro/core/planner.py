@@ -22,7 +22,7 @@ from typing import List, Optional
 
 import numpy as np
 
-from repro.core.aggregation import mixing_matrix
+from repro.core.aggregation import col_union_mask, mixing_matrix
 from repro.core.protocol import Mechanism, RoundContext
 from repro.core.staleness import StalenessState
 
@@ -33,7 +33,11 @@ class PlannedRound:
 
     ``active``/``links`` are post-failure-masking (what the model plane must
     execute); ``W`` is the Eq. 4 mixing matrix; ``duration`` the realized
-    H_t with sampled channels (Eq. 9); ``n_transfers`` the Eq. 10 accounting.
+    H_t with sampled channels (Eq. 9, simulated seconds); ``n_transfers``
+    the Eq. 10 accounting; ``mix_cols`` the union of nonzero mixing COLUMNS
+    (``core.aggregation.col_union_mask``) — the bucket plan the column-sparse
+    engine contracts over, resolved here so the dispatcher never re-derives
+    sparsity structure from W.
     """
     t: int
     active: np.ndarray            # (N,) bool
@@ -42,6 +46,8 @@ class PlannedRound:
     W: np.ndarray                 # (N, N) f32
     duration: float
     n_transfers: int
+    mix_cols: Optional[np.ndarray] = None   # (N,) bool nonzero-column union
+                                  # of W (None ⇒ dispatchers re-derive it)
 
 
 class HorizonPlanner:
@@ -117,22 +123,23 @@ class HorizonPlanner:
             dec.active = dec.active & ~self.down
             dec.links = dec.links & ~self.down[None, :] & ~self.down[:, None]
 
-        # actual round duration with sampled (dynamic) channels
-        raw_link_time = self.model_bytes / self.net.link_rates()
+        # actual round duration with sampled (dynamic) channels: the sparse
+        # row-max route consumes the identical rng draws as the dense
+        # link_rates() but only transforms the round's actual link entries
+        raw_com = self.net.sample_link_row_max(self.model_bytes, dec.links)
         if dec.synchronous:
             # a synchronous barrier cannot abort a pull: the aggregation needs
             # every matched neighbor's model, so deep fades stall the whole
             # round until retransmission succeeds (the straggler/dynamics cost
             # the paper measures) — bounded by the stall+retry ceiling
-            link_time = np.minimum(raw_link_time, self.sync_link_timeout_s)
+            com_part = np.minimum(raw_com, self.sync_link_timeout_s)
             cmp_part = self.h_i                            # full retrain (sync)
             eligible = np.ones(n, bool)
         else:
             # async pulls degrade gracefully: abort/retry ceiling
-            link_time = np.minimum(raw_link_time, self.link_timeout_s)
+            com_part = np.minimum(raw_com, self.link_timeout_s)
             cmp_part = h_cmp
             eligible = dec.active
-        com_part = np.where(dec.links, link_time, 0.0).max(axis=1)
         h_t_i = cmp_part + com_part                        # (N,)
         duration = float(h_t_i[eligible].max()) if eligible.any() else 0.0
 
@@ -150,7 +157,8 @@ class HorizonPlanner:
 
         return PlannedRound(t=t, active=dec.active, links=dec.links,
                             synchronous=dec.synchronous, W=W,
-                            duration=duration, n_transfers=n_transfers)
+                            duration=duration, n_transfers=n_transfers,
+                            mix_cols=col_union_mask(dec.active, dec.links))
 
     def plan(self, horizon: int,
              max_round: Optional[int] = None) -> List[PlannedRound]:

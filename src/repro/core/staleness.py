@@ -46,4 +46,6 @@ def drift_plus_penalty(queue: np.ndarray, tau_next: np.ndarray, tau_bound: int,
 
 
 def max_staleness(tau: np.ndarray) -> int:
+    """Fleet-wide max tau (ROUNDS since last activation; Eq. 12c's tau_max
+    constraint is on this quantity)."""
     return int(np.max(tau)) if len(tau) else 0

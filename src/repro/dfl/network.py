@@ -54,22 +54,65 @@ class EdgeNetwork:
         np.fill_diagonal(r, False)
         return r
 
-    def link_rates(self, dynamic: bool = True) -> np.ndarray:
-        """Per-round Shannon rates (N, N) in bytes/s for j -> i transfers."""
+    def _sample_round_channels(self, dynamic: bool):
+        """Draw one round's channel randomness (the FULL (N, N) arrays).
+
+        The rng stream is the trajectory: every consumer — dense
+        ``link_rates`` and the sparse ``sample_link_row_max`` hot path —
+        must consume the exact same draws in the exact same order, so the
+        sampling is factored here and only the (deterministic) Shannon
+        transform differs between them.
+        """
         cfg = self.cfg
         gain = self.rng.exponential(self._mean_gain_floor)
         if dynamic:
-            gain = gain * self.rng.lognormal(0.0, cfg.gain_fluctuation, gain.shape)
-        snr = self.tx_power_w[None, :] * gain / cfg.noise_w
-        rate_bps = cfg.bandwidth_hz * np.log2(1.0 + snr)
-        rate = rate_bps / 8.0
+            gain = gain * self.rng.lognormal(0.0, cfg.gain_fluctuation,
+                                             gain.shape)
+        drop = None
         if dynamic and cfg.dynamics_drop_prob > 0:
+            drop = self.rng.random(gain.shape) < cfg.dynamics_drop_prob
+        return gain, drop
+
+    def _shannon_rate(self, gain, tx_power_w):
+        """bytes/s for the given gains (elementwise; any shape)."""
+        cfg = self.cfg
+        snr = tx_power_w * gain / cfg.noise_w
+        return cfg.bandwidth_hz * np.log2(1.0 + snr) / 8.0
+
+    def link_rates(self, dynamic: bool = True) -> np.ndarray:
+        """Per-round Shannon rates (N, N) in bytes/s for j -> i transfers."""
+        gain, drop = self._sample_round_channels(dynamic)
+        rate = self._shannon_rate(gain, self.tx_power_w[None, :])
+        if drop is not None:
             # edge dynamics: a blinked-out link degrades to a deep fade (the
             # transfer stalls and is re-established, ~50x slower effective rate)
-            drop = self.rng.random(rate.shape) < cfg.dynamics_drop_prob
             rate = np.where(drop, rate * 0.02, rate)
         np.fill_diagonal(rate, np.inf)
         return rate
+
+    def sample_link_row_max(self, model_bytes: float, needed: np.ndarray,
+                            dynamic: bool = True) -> np.ndarray:
+        """Per-row max transfer TIME (seconds) over the ``needed`` links.
+
+        The per-round control plane only ever reads the sampled channels at
+        the round's link entries (``np.where(links, t, 0).max(axis=1)``), so
+        this consumes the identical rng draws as ``link_rates`` but applies
+        the Shannon transform to the ~k·max_neighbors needed entries instead
+        of all N² — the planner hot path.  Bitwise-equal to the dense route
+        on the needed entries; rows with no needed link return 0.0.  Apply
+        timeout ceilings AFTER the row max: ``max_j min(t_j, c) ==
+        min(max_j t_j, c)`` since clamping is monotone.
+        """
+        gain, drop = self._sample_round_channels(dynamic)
+        out = np.zeros(needed.shape[0], np.float64)
+        rows, cols = np.nonzero(needed)
+        if len(rows) == 0:
+            return out
+        rate = self._shannon_rate(gain[rows, cols], self.tx_power_w[cols])
+        if drop is not None:
+            rate = np.where(drop[rows, cols], rate * 0.02, rate)
+        np.maximum.at(out, rows, model_bytes / rate)
+        return out
 
     def expected_link_time(self, model_bytes: float) -> np.ndarray:
         """Deterministic (mean-gain) transfer-time estimate used by WAA."""
@@ -84,6 +127,8 @@ class EdgeNetwork:
 
 def heterogeneous_compute_times(n: int, base_s: float, rng: np.random.Generator,
                                 sigma: float = 0.35) -> np.ndarray:
-    """Per-worker local-training time h_i: base batch time x lognormal speed
-    factor (paper: measured batch time x normal coefficient)."""
+    """Per-worker local-training time h_i in simulated SECONDS (paper Eq. 7's
+    per-round compute term): base batch time x lognormal speed factor
+    (paper: measured batch time x normal coefficient; the testbed spans
+    Jetson Nano -> Orin, ~10x)."""
     return base_s * rng.lognormal(0.0, sigma, size=n)

@@ -21,8 +21,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import (apply_mixing, mixing_rows, padded_rows,
-                                    plan_buckets)
+from repro.core.aggregation import (apply_mixing, bucket_size, col_union_mask,
+                                    mixing_rows, mixing_rows_cols,
+                                    padded_rows, plan_buckets)
 from repro.core.planner import HorizonPlanner, PlannedRound
 from repro.core.protocol import Mechanism
 from repro.data.partition import dirichlet_partition
@@ -96,12 +97,37 @@ class SimConfig:
                                       #   ahead and execute them as one
                                       #   lax.scan mega-dispatch (see class
                                       #   docstring); 1 = per-round dispatch
+    col_sparse_mix: bool = True       # fused engine: contract Eq. 4 over the
+                                      #   gathered union of nonzero mixing
+                                      #   COLUMNS — (k, u) @ (u, P) with
+                                      #   u <= k*(max_neighbors+1) — instead
+                                      #   of the row-sparse (k, N) @ (N, P).
+                                      #   Off = PR 2 row-sparse oracle path;
+                                      #   control-plane trajectories are
+                                      #   identical either way
+    fused_local_sgd: bool = True      # fused engine: unrolled manual-backward
+                                      #   multi-step SGD lowering (one fused
+                                      #   jit region over the gathered active
+                                      #   rows) instead of the per-step AD
+                                      #   lax.scan.  Off = AD oracle; only
+                                      #   f32 rounding differs.  Auto-falls
+                                      #   back to the AD path for non-MLP
+                                      #   specs
     n_samples: int = 20000
     dim: int = 32
 
 
 @dataclasses.dataclass
 class History:
+    """Per-eval-point trajectory of one simulation run.
+
+    Units: ``sim_time`` is simulated edge wall-clock SECONDS (sum of Eq. 9
+    round durations — the paper's x-axis); ``comm_gb`` cumulative transfer
+    volume in GB (Eq. 10 accounting at ``model_bytes_scale`` pricing);
+    ``staleness_avg``/``staleness_max`` are in ROUNDS since last activation
+    (Eq. 6); ``wall_s``/``eval_wall_s``/``setup_wall_s`` are REAL host
+    seconds (benchmark accounting, not simulation state).
+    """
     rounds: List[int] = dataclasses.field(default_factory=list)
     sim_time: List[float] = dataclasses.field(default_factory=list)
     comm_gb: List[float] = dataclasses.field(default_factory=list)
@@ -194,10 +220,28 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
     hist = History()
     bound_log = {"active": [], "W": []} if record_history_for_bound else None
     horizon = max(1, cfg.scan_horizon) if cfg.fused_engine else 1
+    # the fused SGD lowering hand-differentiates the sim-plane MLP; any other
+    # architecture plugged into the flat buffer falls back to the AD scan
+    fused_sgd = (cfg.fused_engine and cfg.fused_local_sgd
+                 and WK.fused_sgd_supported(flat_spec))
 
     def bucket_key(p):
-        """(k_mix, k_train) power-of-two shape buckets of a planned round."""
-        return plan_buckets(p.active, p.links)
+        """Power-of-two shape buckets of a planned round — (k_mix, k_train)
+        plus, under the column-sparse mix, the bucket of the planner-resolved
+        nonzero-column union (every round of a scan chunk must share one
+        (k, u) contraction shape)."""
+        base = plan_buckets(p.active, p.links)
+        if not cfg.col_sparse_mix:
+            return base
+        cols = (p.mix_cols if p.mix_cols is not None
+                else col_union_mask(p.active, p.links))
+        return base + (bucket_size(int(cols.sum()), cfg.n_workers),)
+
+    def mix_is_train(p):
+        """True iff the round's mix rows equal its train rows (every DySTop
+        round: only activated workers pull), letting the fused lowering feed
+        Eq. 4 output straight into Eq. 5 — bit-identical, one scatter less."""
+        return not (p.links.any(axis=1) & ~p.active).any()
 
     def flush(plans):
         """Dispatch the pending planned rounds to the model plane (Eq. 4+5).
@@ -218,27 +262,49 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
                 if run == 1:
                     flush(plans[:1])
                 else:
-                    w_rows_h, ctrl_h, ts = WK.pack_horizon(plans[:run])
+                    # a union bucket that reaches N degenerates to the
+                    # row-sparse contraction plus a pointless (N, P) gather —
+                    # fall back host-side so col_sparse_mix is never slower
+                    col = (cfg.col_sparse_mix
+                           and bucket_key(plans[0])[2] < cfg.n_workers)
+                    w_rows_h, ctrl_h, ts = WK.pack_horizon(
+                        plans[:run], col_sparse=col)
                     buf, _ = WK.mega_round_step(
                         buf, jnp.asarray(w_rows_h), jnp.asarray(ctrl_h),
                         jnp.asarray(ts), data_x, data_y, part_idx,
                         part_sizes, batch_key, spec=flat_spec, lr=cfg.lr,
                         local_steps=cfg.local_steps,
-                        batch_size=cfg.batch_size, use_kernel=cfg.use_kernel)
+                        batch_size=cfg.batch_size, use_kernel=cfg.use_kernel,
+                        col_sparse=col, fused_sgd=fused_sgd,
+                        with_losses=False,
+                        mix_is_train=(fused_sgd
+                                      and all(mix_is_train(p)
+                                              for p in plans[:run])))
                 plans = plans[run:]
             if len(plans) == 1:
-                # single-round oracle path: one donated round_step dispatch,
-                # bit-for-bit the pre-horizon engine
+                # single-round path: one donated round_step dispatch; with
+                # col_sparse_mix/fused_local_sgd off this is bit-for-bit the
+                # pre-horizon PR 1 engine (the correctness oracle)
                 p = plans[0]
-                w_rows, mix_ids = mixing_rows(p.W, p.active, p.links)
+                col = (cfg.col_sparse_mix
+                       and bucket_key(p)[2] < cfg.n_workers)
+                if col:
+                    w_rows, mix_ids, col_ids = mixing_rows_cols(
+                        p.W, p.active, p.links, cols_mask=p.mix_cols)
+                else:
+                    w_rows, mix_ids = mixing_rows(p.W, p.active, p.links)
+                    col_ids = None
                 train_ids, train_mask = padded_rows(p.active)
-                ctrl = WK.pack_round_ctrl(mix_ids, train_ids, train_mask)
+                ctrl = WK.pack_round_ctrl(mix_ids, train_ids, train_mask,
+                                          col_ids=col_ids)
                 buf, _ = WK.round_step(
                     buf, jnp.asarray(w_rows), jnp.asarray(ctrl),
                     data_x, data_y, part_idx, part_sizes, batch_key,
                     np.int32(p.t), spec=flat_spec, lr=cfg.lr,
                     local_steps=cfg.local_steps, batch_size=cfg.batch_size,
-                    use_kernel=cfg.use_kernel)
+                    use_kernel=cfg.use_kernel,
+                    col_sparse=col, fused_sgd=fused_sgd, with_losses=False,
+                    mix_is_train=fused_sgd and mix_is_train(p))
         else:
             for p in plans:
                 stacked = apply_mixing(jnp.asarray(p.W), stacked,

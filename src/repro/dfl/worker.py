@@ -7,15 +7,23 @@ worker replicas live in one stacked pytree (leading worker axis) and local
 SGD for the activated subset is a masked vmap.
 
 Fused round engine: ``round_step`` keeps the N replicas as ONE flat (N, P)
-device buffer (see ``flat_state``) and runs Eq. 4 mixing (active-row sparse
-matmul), on-device minibatch sampling, and masked local SGD (Eq. 5) in a
-single donated jit — one dispatch per simulated round instead of per-leaf
-mixing + a host sampling loop + a separate train dispatch.
+device buffer (see ``flat_state``) and runs Eq. 4 mixing (sparse matmul),
+on-device minibatch sampling, and masked local SGD (Eq. 5) in a single
+donated jit — one dispatch per simulated round instead of per-leaf mixing +
+a host sampling loop + a separate train dispatch.  ``mega_round_step``
+executes a whole planned horizon as one ``lax.scan``.
+
+Default hot paths (each with a flag-gated slower oracle):
+  * column-sparse mixing — Eq. 4 contracts (k, u) @ (u, P) over the gathered
+    union of nonzero columns (``mix_flat_cols``; oracle ``mix_flat``);
+  * fused local-steps SGD — Eq. 5 as one unrolled manual-backward jit region
+    over the gathered active rows (``local_sgd_flat_fused``; oracle
+    ``local_sgd_flat``, the per-step AD scan).
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -162,6 +170,21 @@ def mlp_loss_flat(vec: jnp.ndarray, spec: FS.FlatSpec, x: jnp.ndarray,
     return mlp_loss(FS.unravel_row(vec, spec), x, y)
 
 
+def _mix_rows(buf: jnp.ndarray, w_rows: jnp.ndarray, col_ids,
+              use_kernel: bool) -> jnp.ndarray:
+    """The scatter-free Eq. 4 contraction: (k, N) @ (N, P), or column-sparse
+    (k, u) @ (u, P) over the gathered union slab when ``col_ids`` is given.
+    Single source for the kernel/jnp variants, shared by ``mix_flat``,
+    ``mix_flat_cols`` and the ``mix_is_train`` fused path."""
+    if use_kernel:
+        from repro.kernels import ops as K
+        return (K.aggregate_rows_cols(w_rows, col_ids, buf)
+                if col_ids is not None else K.aggregate_rows(w_rows, buf))
+    if col_ids is not None:
+        return w_rows.astype(jnp.float32) @ buf[col_ids]
+    return w_rows.astype(jnp.float32) @ buf
+
+
 def mix_flat(buf: jnp.ndarray, w_rows: jnp.ndarray, row_ids: jnp.ndarray,
              use_kernel: bool = False) -> jnp.ndarray:
     """Sparse Eq. 4 over the flat buffer: mix the k non-identity rows only.
@@ -172,12 +195,24 @@ def mix_flat(buf: jnp.ndarray, w_rows: jnp.ndarray, row_ids: jnp.ndarray,
     """
     if w_rows.shape[0] == 0:
         return buf
-    if use_kernel:
-        from repro.kernels import ops as K
-        mixed = K.aggregate_rows(w_rows, buf)
-    else:
-        mixed = w_rows.astype(jnp.float32) @ buf
-    return buf.at[row_ids].set(mixed)
+    return buf.at[row_ids].set(_mix_rows(buf, w_rows, None, use_kernel))
+
+
+def mix_flat_cols(buf: jnp.ndarray, w_sub: jnp.ndarray, row_ids: jnp.ndarray,
+                  col_ids: jnp.ndarray, use_kernel: bool = False
+                  ) -> jnp.ndarray:
+    """Column-sparse Eq. 4 over the flat buffer: the default mix hot path.
+
+    ``w_sub`` (k, u) are the gathered non-identity rows of W restricted to
+    the union of their nonzero columns, ``col_ids`` (u,) that union (see
+    ``core.aggregation.mixing_rows_cols``); the (u, P) slab is gathered once
+    and the contraction is (k, u) @ (u, P) — k·u·P flops instead of the
+    row-sparse path's k·N·P, exact because every column of W outside the
+    union is zero on the gathered rows (padding columns are zeroed host-side).
+    """
+    if w_sub.shape[0] == 0:
+        return buf
+    return buf.at[row_ids].set(_mix_rows(buf, w_sub, col_ids, use_kernel))
 
 
 def sample_batches_device(key, worker_ids: jnp.ndarray, data_x: jnp.ndarray,
@@ -219,46 +254,182 @@ def local_sgd_flat(buf: jnp.ndarray, xb: jnp.ndarray, yb: jnp.ndarray,
     return jax.vmap(per_worker)(buf, xb, yb, active.astype(jnp.float32))
 
 
+_MLP_TREEDEF = jax.tree.structure(
+    {k: 0 for k in ("w1", "b1", "w2", "b2", "w3", "b3")})
+
+
+def fused_sgd_supported(spec: FS.FlatSpec) -> bool:
+    """True iff ``spec`` is the sim-plane 3-layer MLP the fused SGD lowering
+    hand-differentiates (``init_mlp`` layout).  Any other architecture falls
+    back to the generic AD scan (``local_sgd_flat``)."""
+    if spec.treedef != _MLP_TREEDEF or len(spec.shapes) != 6:
+        return False
+    shapes = dict(zip(("b1", "b2", "b3", "w1", "w2", "w3"), spec.shapes))
+    return (len(shapes["w1"]) == len(shapes["w2"]) == len(shapes["w3"]) == 2
+            and shapes["w1"][1] == shapes["b1"][0] == shapes["w2"][0]
+            and shapes["w2"][1] == shapes["b2"][0] == shapes["w3"][0]
+            and shapes["w3"][1] == shapes["b3"][0])
+
+
+def local_sgd_flat_fused(buf: jnp.ndarray, xb: jnp.ndarray, yb: jnp.ndarray,
+                         active: jnp.ndarray, spec: FS.FlatSpec, lr: float,
+                         with_losses: bool = True
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused multi-step SGD (Eq. 5) — the default local-training lowering.
+
+    Replaces the per-local-step ``lax.scan`` of AD gradients with one
+    straight-line jit region over the gathered active rows: the steps are
+    unrolled (``local_steps`` is static), the MLP forward/backward is written
+    out as batched einsums over the (k, ·, ·) weight slabs, and the
+    cross-entropy backward is the closed form ``softmax(logits) - onehot``
+    — no ``take_along_axis`` scatter-gradients, no scan carry, so XLA fuses
+    the whole multi-step chain into one computation (the per-step AD path
+    lowers to batched tiny gemms separated by while-loop barriers, ~12
+    GFLOP/s on CPU).  Minibatches for ALL steps arrive pre-gathered as one
+    batched draw (``sample_batches_device``).
+
+    Exactly ``local_sgd_flat``'s contract: xb (k, steps, batch, dim), yb
+    (k, steps, batch), active (k,) — inactive rows get a zero-scaled update
+    (bit-identical buffer row) and their loss is still reported; requires
+    ``fused_sgd_supported(spec)``.  Numerics match the AD oracle to f32
+    rounding (einsum reduction order differs), pinned by tests.
+
+    ``with_losses=False`` skips the loss VALUES (returns zeros): the
+    gradient only needs ``softmax(logits) - onehot``, so the log/log-sum-exp
+    chain drops out of the round entirely — the AD oracle gets the value for
+    free from ``value_and_grad``, but here it is real work the simulator
+    (which discards per-round losses) never pays.
+    """
+    p = FS.unflatten(buf.astype(jnp.float32), spec)
+    w1, b1, w2, b2 = p["w1"], p["b1"], p["w2"], p["b2"]
+    w3, b3 = p["w3"], p["b3"]
+    n_classes = w3.shape[-1]
+    batch = xb.shape[2]
+    a = active.astype(jnp.float32) * lr
+    sw = a[:, None, None]                      # (k, 1, 1) weight-update scale
+    sb = a[:, None]                            # (k, 1)    bias-update scale
+    losses = []
+    for s in range(xb.shape[1]):               # local_steps: static, unrolled
+        x, y = xb[:, s], yb[:, s]              # (k, batch, dim), (k, batch)
+        z1 = jnp.einsum("kbd,kdh->kbh", x, w1) + b1[:, None]
+        h1 = jax.nn.relu(z1)
+        z2 = jnp.einsum("kbh,khg->kbg", h1, w2) + b2[:, None]
+        h2 = jax.nn.relu(z2)
+        logits = jnp.einsum("kbg,kgc->kbc", h2, w3) + b3[:, None]
+        onehot = jax.nn.one_hot(y, n_classes, dtype=jnp.float32)
+        if with_losses:
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            losses.append(-jnp.sum(logp * onehot, -1).mean(-1))    # (k,)
+            probs = jnp.exp(logp)
+        else:
+            probs = jax.nn.softmax(logits, axis=-1)
+        dz = (probs - onehot) / batch          # d(mean CE)/d logits
+        # backward as explicit transpose + batched matmul: XLA CPU lowers
+        # these to clean row-major batched gemms, measurably faster than the
+        # einsum contractions over the middle (batch) axis
+        h2t = jnp.transpose(h2, (0, 2, 1))
+        h1t = jnp.transpose(h1, (0, 2, 1))
+        g_w3 = jnp.matmul(h2t, dz)
+        g_b3 = dz.sum(1)
+        dh2 = jnp.einsum("kbc,kgc->kbg", dz, w3) * (z2 > 0)
+        g_w2 = jnp.matmul(h1t, dh2)
+        g_b2 = dh2.sum(1)
+        dh1 = jnp.einsum("kbg,khg->kbh", dh2, w2) * (z1 > 0)
+        g_w1 = jnp.matmul(jnp.transpose(x, (0, 2, 1)), dh1)
+        g_b1 = dh1.sum(1)
+        w1, b1 = w1 - sw * g_w1, b1 - sb * g_b1
+        w2, b2 = w2 - sw * g_w2, b2 - sb * g_b2
+        w3, b3 = w3 - sw * g_w3, b3 - sb * g_b3
+    new = {"w1": w1, "b1": b1, "w2": w2, "b2": b2, "w3": w3, "b3": b3}
+    out, _ = FS.flatten_stacked(new)
+    loss = (jnp.stack(losses).mean(0) if with_losses
+            else jnp.zeros((buf.shape[0],), jnp.float32))
+    return out, loss
+
+
 def pack_round_ctrl(mix_row_ids: np.ndarray, train_row_ids: np.ndarray,
-                    train_mask: np.ndarray) -> np.ndarray:
+                    train_mask: np.ndarray,
+                    col_ids: Optional[np.ndarray] = None) -> np.ndarray:
     """Concatenate the per-round integer control vectors into ONE host array
     so the fused dispatch pays a single small H2D transfer instead of three
-    (device_put dominates tiny-array transfer cost on CPU)."""
-    return np.concatenate([np.asarray(mix_row_ids, np.int32),
-                           np.asarray(train_row_ids, np.int32),
-                           np.asarray(train_mask, np.int32)])
+    (device_put dominates tiny-array transfer cost on CPU).  Layout:
+    ``[mix_row_ids (k,) | col_ids (u,) if column-sparse | train_row_ids
+    (k_train,) | train_mask (k_train,)]`` — the dispatcher recovers the
+    segment boundaries from the static W shapes."""
+    segs = [np.asarray(mix_row_ids, np.int32)]
+    if col_ids is not None:
+        segs.append(np.asarray(col_ids, np.int32))
+    segs += [np.asarray(train_row_ids, np.int32),
+             np.asarray(train_mask, np.int32)]
+    return np.concatenate(segs)
 
 
 def _mix_train_body(buf: jnp.ndarray, w_rows: jnp.ndarray,
-                    mix_row_ids: jnp.ndarray, train_row_ids: jnp.ndarray,
+                    mix_row_ids: jnp.ndarray, col_ids,
+                    train_row_ids: jnp.ndarray,
                     train_mask: jnp.ndarray, xb, yb, spec: FS.FlatSpec,
-                    lr: float, use_kernel: bool
+                    lr: float, use_kernel: bool, fused_sgd: bool,
+                    with_losses: bool = True, mix_is_train: bool = False
                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Mix + masked SGD on pre-sampled batches — the buffer-dependent half of
     a round, shared by ``round_step`` and ``mega_round_step``'s scan body
     (batch sampling is buffer-INdependent, so the mega path hoists it out of
-    the scan and draws the whole horizon in one batched op)."""
+    the scan and draws the whole horizon in one batched op).  ``col_ids``
+    non-None selects the column-sparse contraction; ``fused_sgd`` the
+    unrolled manual-backward SGD lowering (both default-on hot paths, with
+    ``mix_flat``/``local_sgd_flat`` as the flag-gated oracles).
+
+    ``mix_is_train`` (host-verified: the mix row ids EQUAL the train row
+    ids, as in every DySTop round — activated workers are exactly the
+    pullers) lets the fused lowering consume the mixed rows directly: the
+    Eq. 4 output feeds Eq. 5 without the intermediate scatter into the
+    buffer and re-gather of the same rows — bit-identical values, one
+    full-width buffer write less per round."""
     n = buf.shape[0]
-    buf = mix_flat(buf, w_rows, mix_row_ids, use_kernel=use_kernel)
+    if fused_sgd and mix_is_train and train_row_ids.shape[0] > 0 \
+            and w_rows.shape[0] > 0:
+        sub = _mix_rows(buf, w_rows, col_ids, use_kernel)
+        new_sub, sub_loss = local_sgd_flat_fused(sub, xb, yb, train_mask,
+                                                 spec, lr,
+                                                 with_losses=with_losses)
+        buf = buf.at[train_row_ids].set(new_sub)
+        losses = jnp.zeros((n,), jnp.float32)
+        if with_losses:
+            losses = losses.at[train_row_ids].set(sub_loss * train_mask)
+        return buf, losses
+    if col_ids is not None:
+        buf = mix_flat_cols(buf, w_rows, mix_row_ids, col_ids,
+                            use_kernel=use_kernel)
+    else:
+        buf = mix_flat(buf, w_rows, mix_row_ids, use_kernel=use_kernel)
     losses = jnp.zeros((n,), jnp.float32)
     if train_row_ids.shape[0] == 0:
         return buf, losses
     sub = buf[train_row_ids]                       # (k, P) activated models
-    new_sub, sub_loss = local_sgd_flat(sub, xb, yb, train_mask, spec, lr)
+    if fused_sgd:
+        new_sub, sub_loss = local_sgd_flat_fused(sub, xb, yb, train_mask,
+                                                 spec, lr,
+                                                 with_losses=with_losses)
+    else:
+        new_sub, sub_loss = local_sgd_flat(sub, xb, yb, train_mask, spec, lr)
     buf = buf.at[train_row_ids].set(new_sub)
-    losses = losses.at[train_row_ids].set(sub_loss * train_mask)
+    if with_losses:
+        losses = losses.at[train_row_ids].set(sub_loss * train_mask)
     return buf, losses
 
 
 @functools.partial(jax.jit,
                    static_argnames=("spec", "lr", "local_steps", "batch_size",
-                                    "use_kernel"),
+                                    "use_kernel", "col_sparse", "fused_sgd",
+                                    "with_losses", "mix_is_train"),
                    donate_argnums=(0,))
 def round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
                data_x: jnp.ndarray, data_y: jnp.ndarray,
                part_idx: jnp.ndarray, part_sizes: jnp.ndarray, key, t,
                *, spec: FS.FlatSpec, lr: float, local_steps: int,
-               batch_size: int, use_kernel: bool = False
+               batch_size: int, use_kernel: bool = False,
+               col_sparse: bool = False, fused_sgd: bool = False,
+               with_losses: bool = True, mix_is_train: bool = False
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One fused simulated round: sparse mix + on-device sampling + local SGD.
 
@@ -268,16 +439,23 @@ def round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
     computed for the gathered activated sub-buffer alone — O(k·N·P +
     k·steps·batch·P) per round instead of O(N²·P + N·steps·batch·P).  The
     (N, P) buffer is donated, so XLA updates the model storage in place.
-    ``ctrl`` is the ``pack_round_ctrl`` concatenation of
-    [mix_row_ids (k_mix,) | train_row_ids (k_train,) | train_mask (k_train,)].
-    Returns (new buffer, per-worker mean loss scattered to (N,), zero for
-    idle workers).
+
+    ``col_sparse=True`` (the default engine path) interprets ``w_rows`` as
+    the (k, u) column-restricted rows from ``mixing_rows_cols`` and cuts the
+    mix to k·u·P flops; ``fused_sgd=True`` selects the unrolled
+    manual-backward SGD lowering (``local_sgd_flat_fused``).  ``ctrl`` is
+    the ``pack_round_ctrl`` concatenation of [mix_row_ids (k_mix,) |
+    col_ids (u,) when col_sparse | train_row_ids (k_train,) | train_mask
+    (k_train,)].  Returns (new buffer, per-worker mean loss scattered to
+    (N,), zero for idle workers).
     """
     k_mix = w_rows.shape[0]
-    k_train = (ctrl.shape[0] - k_mix) // 2
+    u = w_rows.shape[1] if col_sparse and k_mix else 0
+    k_train = (ctrl.shape[0] - k_mix - u) // 2
     mix_row_ids = ctrl[:k_mix]
-    train_row_ids = ctrl[k_mix:k_mix + k_train]
-    train_mask = ctrl[k_mix + k_train:].astype(jnp.float32)
+    col_ids = ctrl[k_mix:k_mix + u] if col_sparse else None
+    train_row_ids = ctrl[k_mix + u:k_mix + u + k_train]
+    train_mask = ctrl[k_mix + u + k_train:].astype(jnp.float32)
     xb = yb = None
     if k_train:
         key = jax.random.fold_in(key, t)           # per-round stream, in-jit
@@ -285,11 +463,12 @@ def round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
                                        part_idx[train_row_ids],
                                        part_sizes[train_row_ids],
                                        local_steps, batch_size)
-    return _mix_train_body(buf, w_rows, mix_row_ids, train_row_ids,
-                           train_mask, xb, yb, spec, lr, use_kernel)
+    return _mix_train_body(buf, w_rows, mix_row_ids, col_ids, train_row_ids,
+                           train_mask, xb, yb, spec, lr, use_kernel,
+                           fused_sgd, with_losses, mix_is_train)
 
 
-def pack_horizon(plans, min_bucket: int = 8
+def pack_horizon(plans, min_bucket: int = 8, col_sparse: bool = False
                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Stack H planned rounds' control tensors for ``mega_round_step``.
 
@@ -301,20 +480,50 @@ def pack_horizon(plans, min_bucket: int = 8
     are exact no-ops: identity W rows / zero train masks targeting workers
     idle in that round.
 
-    Returns ``(w_rows (H, K_mix, N) f32, ctrl (H, K_mix + 2*K_train) i32,
-    ts (H,) i32)`` — three host arrays, so the whole horizon pays three H2D
-    transfers instead of 3·H.
+    ``col_sparse=True`` packs the column-sparse contraction instead: W rows
+    are restricted to the horizon-max bucket of each round's nonzero-column
+    union (``PlannedRound.mix_cols`` when the planner resolved it, else
+    re-derived), and the union's ``col_ids`` ride in ``ctrl``.
+
+    Returns ``(w_rows (H, K_mix, N | U) f32, ctrl (H, K_mix [+ U] +
+    2*K_train) i32, ts (H,) i32)`` — three host arrays, so the whole horizon
+    pays three H2D transfers instead of 3·H.
     """
-    from repro.core.aggregation import mixing_rows, padded_rows, plan_buckets
+    from repro.core.aggregation import (bucket_size, col_union_mask,
+                                        mixing_rows, mixing_rows_cols,
+                                        padded_rows, plan_buckets)
 
     n = plans[0].W.shape[0]
     buckets = [plan_buckets(p.active, p.links, min_bucket) for p in plans]
     k_mix = max(b[0] for b in buckets)
     k_train = max(b[1] for b in buckets)
     h = len(plans)
+    ts = np.zeros((h,), np.int32)
+    if col_sparse:
+        def cols_of(p):
+            return (p.mix_cols if getattr(p, "mix_cols", None) is not None
+                    else col_union_mask(p.active, p.links))
+
+        u = max(bucket_size(int(cols_of(p).sum()), n, min_bucket)
+                for p in plans) if k_mix else 0
+        if u >= n:
+            u = n
+        w_rows_h = np.zeros((h, k_mix, u), np.float32)
+        ctrl_h = np.zeros((h, k_mix + u + 2 * k_train), np.int32)
+        for i, p in enumerate(plans):
+            w_sub, mix_ids, col_ids = mixing_rows_cols(
+                p.W, p.active, p.links, min_bucket, pad_to=k_mix,
+                col_pad_to=u, cols_mask=cols_of(p))
+            train_ids, train_mask = padded_rows(p.active, min_bucket,
+                                                pad_to=k_train)
+            if k_mix:
+                w_rows_h[i] = w_sub
+            ctrl_h[i] = pack_round_ctrl(mix_ids, train_ids, train_mask,
+                                        col_ids=col_ids)
+            ts[i] = p.t
+        return w_rows_h, ctrl_h, ts
     w_rows_h = np.zeros((h, k_mix, n), np.float32)
     ctrl_h = np.zeros((h, k_mix + 2 * k_train), np.int32)
-    ts = np.zeros((h,), np.int32)
     for i, p in enumerate(plans):
         w_rows, mix_ids = mixing_rows(p.W, p.active, p.links, min_bucket,
                                       pad_to=k_mix)
@@ -329,13 +538,16 @@ def pack_horizon(plans, min_bucket: int = 8
 
 @functools.partial(jax.jit,
                    static_argnames=("spec", "lr", "local_steps", "batch_size",
-                                    "use_kernel"),
+                                    "use_kernel", "col_sparse", "fused_sgd",
+                                    "with_losses", "mix_is_train"),
                    donate_argnums=(0,))
 def mega_round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
                     ts: jnp.ndarray, data_x: jnp.ndarray, data_y: jnp.ndarray,
                     part_idx: jnp.ndarray, part_sizes: jnp.ndarray, key,
                     *, spec: FS.FlatSpec, lr: float, local_steps: int,
-                    batch_size: int, use_kernel: bool = False
+                    batch_size: int, use_kernel: bool = False,
+                    col_sparse: bool = False, fused_sgd: bool = False,
+                    with_losses: bool = True, mix_is_train: bool = False
                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """H horizon-planned rounds as ONE donated ``lax.scan`` dispatch.
 
@@ -352,13 +564,19 @@ def mega_round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
     fold_in(key, t) + per-worker fold_in, exactly like ``round_step``, so any
     horizon split yields bit-identical buffers); only the mix + SGD — the
     part that actually depends on the evolving buffer — runs per scan step.
+    ``col_sparse``/``fused_sgd`` select the column-sparse contraction and
+    the unrolled SGD lowering exactly as in ``round_step`` (with
+    ``pack_horizon(col_sparse=True)`` stacks: ``w_rows (H, K_mix, U)`` and
+    the per-round ``col_ids`` riding in ``ctrl``).
     Returns (new buffer, (H, N) per-round losses).
     """
     k_mix = w_rows.shape[1]
-    k_train = (ctrl.shape[1] - k_mix) // 2
+    u = w_rows.shape[2] if col_sparse and k_mix else 0
+    k_train = (ctrl.shape[1] - k_mix - u) // 2
     mix_ids = ctrl[:, :k_mix]                                   # (H, k_mix)
-    train_ids = ctrl[:, k_mix:k_mix + k_train]                  # (H, k_train)
-    masks = ctrl[:, k_mix + k_train:].astype(jnp.float32)       # (H, k_train)
+    col_ids = ctrl[:, k_mix:k_mix + u] if col_sparse else None  # (H, u)
+    train_ids = ctrl[:, k_mix + u:k_mix + u + k_train]          # (H, k_train)
+    masks = ctrl[:, k_mix + u + k_train:].astype(jnp.float32)   # (H, k_train)
     if k_train:
         keys = jax.vmap(jax.random.fold_in, (None, 0))(key, ts)
         xb, yb = jax.vmap(
@@ -368,9 +586,20 @@ def mega_round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
     else:
         xb = yb = jnp.zeros((ts.shape[0],), jnp.float32)        # scan filler
 
+    if col_sparse:
+        def body(b, xs):
+            w, mids, cids, tids, mask, x, y = xs
+            return _mix_train_body(b, w, mids, cids, tids, mask, x, y, spec,
+                                   lr, use_kernel, fused_sgd, with_losses,
+                                   mix_is_train)
+
+        return jax.lax.scan(body, buf, (w_rows, mix_ids, col_ids, train_ids,
+                                        masks, xb, yb))
+
     def body(b, xs):
         w, mids, tids, mask, x, y = xs
-        return _mix_train_body(b, w, mids, tids, mask, x, y, spec, lr,
-                               use_kernel)
+        return _mix_train_body(b, w, mids, None, tids, mask, x, y, spec, lr,
+                               use_kernel, fused_sgd, with_losses,
+                               mix_is_train)
 
     return jax.lax.scan(body, buf, (w_rows, mix_ids, train_ids, masks, xb, yb))

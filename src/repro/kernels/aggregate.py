@@ -15,6 +15,16 @@ received a push this round (MATCHA's sparse-mixing insight), so the dense
 O(N^2 P) product collapses to the k gathered non-identity rows — the
 ``(k, N) @ (N, P)`` skinny matmul of ``aggregate_rows`` — and a scatter back
 into the model buffer.
+
+Column-sparse variant: each mixing row also has at most max_neighbors+1
+nonzero COLUMNS (an activated worker pulls from a bounded neighborhood plus
+itself), so the k rows jointly touch only the union of their nonzero columns
+— u ≤ k·(max_neighbors+1) worker models.  ``aggregate_rows_cols`` gathers
+that (u, P) slab once and contracts ``(k, u) @ (u, P)``, cutting the mix
+flops (and the buffer read traffic) from k·N·P to k·u·P.  The host side
+(``core.aggregation.mixing_rows_cols``) computes the union, buckets u to
+power-of-two shapes, and zeroes the padding columns of W_sub so padded
+column ids contribute exactly 0.
 """
 from __future__ import annotations
 
@@ -60,6 +70,27 @@ def aggregate_rows(W_rows: jnp.ndarray, X: jnp.ndarray, p_blk: int = 512,
     k, n = W_rows.shape
     assert X.shape[0] == n, (W_rows.shape, X.shape)
     return _panel_matmul(W_rows, X, p_blk, _resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("p_blk", "interpret"))
+def aggregate_rows_cols(W_sub: jnp.ndarray, col_ids: jnp.ndarray,
+                        X: jnp.ndarray, p_blk: int = 512,
+                        interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Column-sparse Eq. 4: Y_rows = W_sub @ X[col_ids].
+
+    W_sub: (k, u) — the k gathered non-identity rows of the mixing matrix
+    restricted to the u-column union of their nonzero columns; col_ids: (u,)
+    i32 union column indices (padding entries may repeat an index, but the
+    host zeroes the matching W_sub columns so they contribute exactly 0);
+    X: (N, P) flat model buffer.  The (u, P) slab is gathered ONCE, then the
+    same VMEM panel schedule as ``aggregate_rows`` contracts (k, u) @ (u, P)
+    — k·u·P flops instead of k·N·P, with u ≤ k·(max_neighbors+1).  Returns
+    the (k, P) mixed rows; the caller scatters them back.
+    """
+    k, u = W_sub.shape
+    assert col_ids.shape == (u,), (W_sub.shape, col_ids.shape)
+    slab = X[col_ids]                           # (u, P) gather, once
+    return _panel_matmul(W_sub, slab, p_blk, _resolve_interpret(interpret))
 
 
 def _panel_matmul(W: jnp.ndarray, X: jnp.ndarray, p_blk: int,

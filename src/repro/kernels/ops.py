@@ -33,6 +33,13 @@ def aggregate_rows(W_rows: jnp.ndarray, X: jnp.ndarray,
     return _agg.aggregate_rows(W_rows, X, p_blk=p_blk)
 
 
+def aggregate_rows_cols(W_sub: jnp.ndarray, col_ids: jnp.ndarray,
+                        X: jnp.ndarray, p_blk: int = 512) -> jnp.ndarray:
+    """Column-sparse Eq. 4: gather the u-column union slab once, then
+    contract ``(k, u) @ (u, P)`` (see ``kernels.aggregate``)."""
+    return _agg.aggregate_rows_cols(W_sub, col_ids, X, p_blk=p_blk)
+
+
 def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None,
                     softcap: Optional[float] = None, blk_q: int = 128,
                     blk_k: int = 128) -> jnp.ndarray:

@@ -11,6 +11,12 @@ def aggregate_ref(W: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
     return (W.astype(jnp.float32) @ X.astype(jnp.float32))
 
 
+def aggregate_rows_cols_ref(W_sub: jnp.ndarray, col_ids: jnp.ndarray,
+                            X: jnp.ndarray) -> jnp.ndarray:
+    """Column-sparse Eq. 4 oracle: gather the union slab, plain matmul."""
+    return W_sub.astype(jnp.float32) @ X.astype(jnp.float32)[col_ids]
+
+
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         causal: bool = True, window: Optional[int] = None,
                         softcap: Optional[float] = None) -> jnp.ndarray:
