@@ -1,0 +1,87 @@
+"""LM fleet engine: persistent-flat planner-driven rounds vs the
+per-call-flatten baseline, at smoke geometry (N=8 real zoo workers).
+
+Three comparisons on the IDENTICAL control-plane + batch trajectory (the
+driver draws one token batch per planned round on either path, and the
+``HorizonPlanner`` rng stream is shared):
+
+* resident vs re-flatten — the PR 4 tentpole: resident flat ``(N, P)`` /
+  ``(N, S)`` buffers + gathered-active-row training + ``lax.scan``
+  mega-rounds, against the pre-resident architecture (stacked pytrees,
+  flatten-per-call ``fleet_mix_stacked``, masked train-ALL-N step).  The
+  win stacks three effects: O(k) instead of O(N) train compute, no
+  pytree<->buffer churn per round, and one dispatch per horizon instead of
+  per round.  Acceptance: ≥1.3x rounds/sec on the CI box.
+* scan vs per-round dispatch — the same resident engine at
+  ``scan_horizon=1`` isolates what mega-round batching buys the LM plane.
+* optimizer spread — resident rounds under sgd vs adam vs adafactor: the
+  gathered-row step is generic over ``Optimizer.update``, so the resident
+  engine prices optimizer choice directly.
+
+    PYTHONPATH=src python -m benchmarks.lm_fleet
+    PYTHONPATH=src python -m benchmarks.run --only lm_fleet --quick
+"""
+from __future__ import annotations
+
+from repro.core.protocol import DySTop
+from repro.dfl import lm_worker as LW
+from repro.models import registry as R
+
+from benchmarks.common import emit
+
+
+def _mech(rounds: int) -> DySTop:
+    return DySTop(V=3.0, t_thre=rounds // 3, max_neighbors=3)
+
+
+def _us_per_round(cfg, rounds: int, reps: int = 2, **kw) -> float:
+    """Warmup run (full length, so every chunk shape compiles), then
+    per-round cost from ``wall_s - eval_wall_s - setup_wall_s`` — best of
+    ``reps`` runs; the floor is robust to scheduler noise on small boxes."""
+    run = LW.LMRunConfig(n_rounds=rounds, batch=2, seq=32, eval_every=rounds,
+                         **kw)
+    LW.run_lm_federation(_mech(rounds), cfg, run)
+
+    def one() -> float:
+        _, h = LW.run_lm_federation(_mech(rounds), cfg, run)
+        return (h.wall_s - h.eval_wall_s - h.setup_wall_s) / rounds * 1e6
+
+    return min(one() for _ in range(reps))
+
+
+def main(rounds: int = 24, workers: int = 8,
+         arch: str = "smollm-135m") -> None:
+    cfg = R.get_smoke_config(arch)
+    kw = dict(n_workers=workers)
+
+    resident = _us_per_round(cfg, rounds, resident_fleet=True, **kw)
+    reflatten = _us_per_round(cfg, rounds, resident_fleet=False, **kw)
+    emit(f"lm_fleet/resident_{workers}w", resident,
+         f"persistent-flat planner-driven fleet ({arch} smoke), "
+         f"gathered-active-row train + scan mega-rounds")
+    emit(f"lm_fleet/reflatten_{workers}w", reflatten,
+         "per-call-flatten baseline: stacked pytrees + masked all-N step")
+    emit(f"lm_fleet/resident_speedup_{workers}w", reflatten / resident,
+         f"resident fleet is {reflatten / resident:.2f}x rounds/sec vs the "
+         f"re-flatten path (same control + batch trajectory)")
+
+    scan1 = _us_per_round(cfg, rounds, resident_fleet=True, scan_horizon=1,
+                          **kw)
+    emit(f"lm_fleet/resident_scan1_{workers}w", scan1,
+         "resident engine, per-round dispatch (scan_horizon=1)")
+    emit(f"lm_fleet/scan_speedup_{workers}w", scan1 / resident,
+         f"horizon-8 mega-rounds are {scan1 / resident:.2f}x vs per-round "
+         f"dispatch on the LM plane")
+
+    for opt in ("sgd", "adafactor"):
+        us = _us_per_round(cfg, rounds, resident_fleet=True, optimizer=opt,
+                           **kw)
+        emit(f"lm_fleet/resident_{opt}_{workers}w", us,
+             f"resident rounds under {opt} (generic Optimizer.update in the "
+             f"gathered-row step)")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    main()

@@ -20,9 +20,9 @@ import time
 import jax
 
 from benchmarks import (bound_check, comm_overhead, completion_time,
-                        convergence_curves, kernels_bench, neighbor_sweep,
-                        phase_ablation, roofline, round_engine,
-                        staleness_sweep, v_sweep)
+                        convergence_curves, kernels_bench, lm_fleet,
+                        neighbor_sweep, phase_ablation, roofline,
+                        round_engine, staleness_sweep, v_sweep)
 from benchmarks.common import header, records
 
 SUITES = {
@@ -46,6 +46,8 @@ SUITES = {
     "kernels": lambda q: kernels_bench.main(),
     # fused device-resident round engine vs legacy per-leaf path
     "round_engine": lambda q: round_engine.main(rounds=40 if q else 80),
+    # persistent-flat planner-driven LM fleet vs per-call-flatten baseline
+    "lm_fleet": lambda q: lm_fleet.main(rounds=12 if q else 24),
     # deliverable (g): roofline table from the dry-run artifacts
     "roofline": lambda q: roofline.main(),
 }

@@ -1,19 +1,19 @@
-"""DySTop federating REAL architectures: 8 workers each training a
-smoke-geometry zoo model (pick any --arch), coordinated by WAA + PTCA, with
-the same staleness-weighted aggregation as the production plane.
+"""DySTop federating REAL architectures on the unified engine: N workers
+each training a smoke-geometry zoo model (pick any --arch), driven by the
+SAME HorizonPlanner + mega-round dispatch as the simulation plane — params
+and optimizer state live in resident flat (N, P) / (N, S) buffers for the
+whole run.
 
     PYTHONPATH=src python examples/dfl_lm.py --arch gemma2-2b --rounds 25
+
+``--oracle`` runs the pre-resident architecture (per-call-flatten mixing +
+masked train-all-N step) on the identical control plane — useful for eyeball
+A/Bs; `benchmarks/lm_fleet.py` times the two properly.
 """
 import argparse
 
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.aggregation import mixing_matrix
-from repro.core.protocol import DySTop, RoundContext
-from repro.core.staleness import StalenessState
+from repro.core.protocol import DySTop
 from repro.dfl import lm_worker as LW
-from repro.dfl.network import EdgeNetwork, NetworkConfig, heterogeneous_compute_times
 from repro.models import registry as R
 
 
@@ -24,59 +24,40 @@ def main():
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--optimizer", default="adam",
+                    choices=("adam", "sgd", "adafactor"))
+    ap.add_argument("--horizon", type=int, default=8,
+                    help="rounds per lax.scan mega-dispatch")
+    ap.add_argument("--oracle", action="store_true",
+                    help="per-call-flatten baseline (resident_fleet=False)")
     args = ap.parse_args()
 
     cfg = R.get_smoke_config(args.arch)
     if R.is_encdec(cfg) or R.has_prefix(cfg):
         raise SystemExit("pick a decoder-only arch for this example")
-    n = args.workers
-    fleet = LW.init_fleet(cfg, n, optimizer="adam", lr=1e-3)
-    streams = LW.worker_streams(cfg, n, args.batch, args.seq)
-    step = LW.make_fleet_step(fleet)
-    print(f"federating {n} x {cfg.arch_id} "
-          f"({fleet.model_bytes / 1e6:.1f} MB per replica)")
-
-    rng = np.random.default_rng(0)
-    net = EdgeNetwork(NetworkConfig(n_workers=n, comm_range_m=80.0), rng)
-    h_i = heterogeneous_compute_times(n, 1.0, rng, sigma=0.6)
-    st = StalenessState.create(n, tau_bound=4)
+    run = LW.LMRunConfig(
+        n_workers=args.workers, n_rounds=args.rounds, batch=args.batch,
+        seq=args.seq, optimizer=args.optimizer, scan_horizon=args.horizon,
+        resident_fleet=not args.oracle, eval_every=5)
     mech = DySTop(V=3.0, t_thre=args.rounds // 3, max_neighbors=3)
-    pulls = np.zeros((n, n))
-    time_since = np.zeros(n)
-    alpha = jnp.full((n,), 1.0 / n)
-    exp_link = net.expected_link_time(fleet.model_bytes)
-    in_range = net.in_range()
-    clock = 0.0
 
-    for t in range(1, args.rounds + 1):
-        h_cmp = np.maximum(h_i - time_since, 0.0)
-        cost = h_cmp + np.where(in_range, exp_link, 0).max(1)
-        ctx = RoundContext(
-            t=t, round_cost=cost, readiness=h_i - time_since, in_range=in_range,
-            class_counts=np.ones((n, 2)), phys_dist=net.dist, pull_counts=pulls,
-            staleness=st, bandwidth_budget=np.full(n, 6.0),
-            data_sizes=np.ones(n), rng=rng)
-        dec = mech.round(ctx)
-        W = mixing_matrix(dec.active, dec.links, np.ones(n))
-        # one flat (N, P) matmul over the k active rows, not one per leaf
-        LW.fleet_mix(fleet, W, active=dec.active, links=dec.links)
-        b = next(streams)
-        batch = {k: jnp.asarray(v) for k, v in b.items()}
-        fleet.stacked_params, fleet.stacked_opt, losses = step(
-            fleet.stacked_params, fleet.stacked_opt, batch,
-            jnp.asarray(dec.active))
-        H_t = float((h_cmp + np.where(dec.links, exp_link, 0).max(1))[dec.active].max())
-        clock += H_t
-        time_since += H_t
-        time_since[dec.active] = 0.0
-        pulls += dec.links
-        st.advance(dec.active)
-        if t % 5 == 0 or t == args.rounds:
-            gl = LW.fleet_eval(fleet, {k: v[0] for k, v in batch.items()}, alpha)
-            print(f"round {t:3d}: sim-time {clock:7.1f}s "
-                  f"active={int(dec.active.sum())} "
-                  f"mean-local-loss {float(losses[dec.active].mean()):.4f} "
-                  f"global-loss {gl:.4f} tau_max={int(st.tau.max())}")
+    print(f"federating {args.workers} x {cfg.arch_id} "
+          f"({'oracle' if args.oracle else 'resident'} engine, "
+          f"horizon {args.horizon})")
+    fleet, hist = LW.run_lm_federation(mech, cfg, run)
+    print(f"{fleet.model_bytes / 1e6:.1f} MB params + "
+          f"{fleet.opt_bytes / 1e6:.1f} MB {args.optimizer} state per replica")
+
+    for i, t in enumerate(hist.rounds):
+        print(f"round {t:3d}: sim-time {hist.sim_time[i]:7.1f}s "
+              f"comm {hist.comm_gb[i] * 1e3:6.1f}MB "
+              f"mean-local-loss {hist.loss_local[i]:.4f} "
+              f"global-loss {hist.loss_global[i]:.4f} "
+              f"tau_max={hist.staleness_max[i]}")
+    per_round = (hist.wall_s - hist.eval_wall_s - hist.setup_wall_s) \
+        / max(args.rounds, 1)
+    print(f"engine: {per_round * 1e3:.1f} ms/round "
+          f"(setup {hist.setup_wall_s:.1f}s, eval {hist.eval_wall_s:.1f}s)")
 
 
 if __name__ == "__main__":

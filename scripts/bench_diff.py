@@ -1,15 +1,17 @@
 #!/usr/bin/env python
-"""Warn-only diff of a fresh benchmark ``--json`` run against the committed
-``BENCH_*.json`` baseline (see docs/BENCHMARKS.md).
+"""Warn-only diff of fresh benchmark ``--json`` runs against the committed
+``BENCH_*.json`` baselines (see docs/BENCHMARKS.md).
 
     python scripts/bench_diff.py BENCH_round_engine.json fresh.json \
-        [--warn-pct 30]
+        [BENCH_lm_fleet.json fresh-lm.json ...] [--warn-pct 30]
 
-Rows are matched by name.  ``*_speedup`` rows (unitless ratios) are compared
-as absolute ratios; ``us_per_call`` rows as relative change (lower is
-better).  Exits 0 ALWAYS — shared-runner numbers are noisy, so regressions
-are surfaced in the log, never used to fail the build.  Missing rows (bench
-renamed/added) are listed informationally.
+Takes one or more ``baseline fresh`` file pairs (any suite that emits the
+harness's ``--json`` schema: round_engine, lm_fleet, ...).  Rows are matched
+by name.  ``*_speedup`` rows (unitless ratios) are compared as absolute
+ratios; ``us_per_call`` rows as relative change (lower is better).  Exits 0
+ALWAYS — shared-runner numbers are noisy, so regressions are surfaced in the
+log, never used to fail the build.  Missing rows (bench renamed/added) are
+listed informationally.
 """
 from __future__ import annotations
 
@@ -24,17 +26,11 @@ def load(path: str) -> dict:
     return {r["name"]: r["us_per_call"] for r in payload.get("results", [])}
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("baseline")
-    ap.add_argument("fresh")
-    ap.add_argument("--warn-pct", type=float, default=30.0,
-                    help="flag changes beyond this percentage")
-    args = ap.parse_args()
-
-    base = load(args.baseline)
-    fresh = load(args.fresh)
+def diff_pair(baseline: str, fresh_path: str, warn_pct: float) -> int:
+    base = load(baseline)
+    fresh = load(fresh_path)
     warned = 0
+    print(f"== {baseline} vs {fresh_path}")
     print(f"{'row':<44} {'baseline':>10} {'fresh':>10} {'delta':>8}")
     for name in sorted(base):
         if name not in fresh:
@@ -45,21 +41,38 @@ def main() -> int:
             continue
         if "speedup" in name.rsplit("/", 1)[-1]:   # ratio row: higher = better
             delta = (f - b) / b * 100.0
-            worse = delta < -args.warn_pct
+            worse = delta < -warn_pct
         else:
             delta = (f - b) / b * 100.0          # us rows: lower = better
-            worse = delta > args.warn_pct
+            worse = delta > warn_pct
         flag = "  << WARN" if worse else ""
         warned += bool(worse)
         print(f"{name:<44} {b:>10.1f} {f:>10.1f} {delta:>+7.1f}%{flag}")
     for name in sorted(set(fresh) - set(base)):
         print(f"{name:<44} {'NEW':>10} {fresh[name]:>10.1f}")
+    return warned
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="+", metavar="BASELINE FRESH",
+                    help="one or more baseline/fresh json file pairs")
+    ap.add_argument("--warn-pct", type=float, default=30.0,
+                    help="flag changes beyond this percentage")
+    args = ap.parse_args()
+    if len(args.files) % 2:
+        ap.error("files must come in baseline/fresh pairs")
+
+    warned = 0
+    for baseline, fresh in zip(args.files[::2], args.files[1::2]):
+        warned += diff_pair(baseline, fresh, args.warn_pct)
+        print()
     if warned:
-        print(f"\n{warned} row(s) beyond +/-{args.warn_pct:.0f}% "
+        print(f"{warned} row(s) beyond +/-{args.warn_pct:.0f}% "
               f"(warn-only: shared-runner noise is expected; investigate if "
               f"it persists across runs)")
     else:
-        print("\nno regressions beyond the warn threshold")
+        print("no regressions beyond the warn threshold")
     return 0                                      # never fail the build
 
 

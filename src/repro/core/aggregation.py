@@ -130,6 +130,38 @@ def plan_buckets_cols(active: np.ndarray, links: np.ndarray,
     return (k_mix, k_train, u)
 
 
+# column-path gather/slab traffic per union column, in units of one dense
+# buffer-row read: the (u, P) slab is read once by the gather, written once,
+# and read once by the gemm.  Sign-calibrated against the committed BENCH
+# mix-plane rows (N=100, k=8, u=64: columns measured 1.67x faster, and the
+# model picks columns there; at u = N it always picks rows).
+COL_GATHER_COST = 3.0
+
+
+def prefer_cols(k: int, u: int, n: int,
+                gather_cost: float = COL_GATHER_COST) -> bool:
+    """Per-chunk traffic model: is the column-sparse contraction cheaper?
+
+    Row-sparse Eq. 4 costs ``k·N·P`` gemm work; the column path costs
+    ``k·u·P`` gemm work plus ``gather_cost·u·P`` slab traffic (gather read +
+    slab write + gemm read).  Pick columns iff
+
+        (k + gather_cost) · u  <  k · N
+
+    evaluated on the BUCKETED shapes actually dispatched.  This subsumes the
+    old binary ``u == N`` fallback (at u = N the inequality is always false)
+    and additionally routes small-k chunks — where the slab traffic can't be
+    amortized over enough rows — to the dense row read.  Both paths are
+    value-exact, so the choice never perturbs trajectories; the constant is
+    calibrated from the committed BENCH round-engine mix-plane rows and
+    should be re-measured on real TPU hardware (the slab streams through
+    VMEM there, shrinking the effective gather cost).
+    """
+    if k <= 0 or u <= 0 or u >= n:
+        return False
+    return (k + gather_cost) * u < k * n
+
+
 def padded_rows(mask: np.ndarray, min_bucket: int = 8,
                 pad_to: int | None = None) -> Tuple[np.ndarray, np.ndarray]:
     """Indices of the k True rows, padded to a power-of-two shape bucket.

@@ -18,11 +18,12 @@ bit-for-bit reproducible at any horizon.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Iterator, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.aggregation import col_union_mask, mixing_matrix
+from repro.core.aggregation import (bucket_size, col_union_mask,
+                                    mixing_matrix, plan_buckets)
 from repro.core.protocol import Mechanism, RoundContext
 from repro.core.staleness import StalenessState
 
@@ -48,6 +49,61 @@ class PlannedRound:
     n_transfers: int
     mix_cols: Optional[np.ndarray] = None   # (N,) bool nonzero-column union
                                   # of W (None ⇒ dispatchers re-derive it)
+
+
+def bucket_key(plan: "PlannedRound", n_workers: int,
+               col_sparse: bool = False,
+               min_bucket: int = 8) -> Tuple[int, ...]:
+    """Power-of-two shape buckets of one planned round.
+
+    ``(k_mix, k_train)`` — plus the bucket of the nonzero-column union when
+    the consumer contracts column-sparse — is everything a model plane needs
+    to know to batch rounds into one ``lax.scan`` dispatch: every round of a
+    chunk must share one contraction shape.  Model-value-independent, so it
+    lives with the planner and serves BOTH planes (the MLP simulation engine
+    and the LM fleet engine) rather than being re-derived per worker module.
+    """
+    base = plan_buckets(plan.active, plan.links, min_bucket)
+    if not col_sparse:
+        return base
+    cols = (plan.mix_cols if plan.mix_cols is not None
+            else col_union_mask(plan.active, plan.links))
+    return base + (bucket_size(int(cols.sum()), n_workers, min_bucket),)
+
+
+def mix_is_train(plan: "PlannedRound") -> bool:
+    """True iff the round's mixing rows EQUAL its training rows — i.e. no
+    worker pulls without also being activated (every DySTop round: only
+    activated workers build links).  Lets a fused model plane feed the Eq. 4
+    output straight into Eq. 5 without scattering and re-gathering the same
+    rows; push-style baselines (SA-ADFL) set links on passive receivers and
+    return False here.
+    """
+    return not (plan.links.any(axis=1) & ~plan.active).any()
+
+
+def chunk_spans(plans: List["PlannedRound"], n_workers: int,
+                col_sparse: bool = False, min_bucket: int = 8
+                ) -> Iterator[Tuple[int, int, Tuple[int, ...]]]:
+    """Split a pending plan list into maximal bucket-uniform ``[lo, hi)``
+    runs — the chunks a model plane ships as single ``lax.scan``
+    mega-dispatches — yielding ``(lo, hi, key)`` with the run's shared
+    ``bucket_key`` so dispatchers never re-derive it (one source for the
+    (col_sparse, min_bucket) arguments).  Splitting (rather than padding to
+    the horizon max) means no round ever pays a larger shape bucket than its
+    own single-dispatch bucket; in the steady regime keys rarely change, so
+    chunks stay horizon-length.
+    """
+    lo = 0
+    while lo < len(plans):
+        key = bucket_key(plans[lo], n_workers, col_sparse, min_bucket)
+        hi = lo + 1
+        while (hi < len(plans)
+               and bucket_key(plans[hi], n_workers, col_sparse,
+                              min_bucket) == key):
+            hi += 1
+        yield lo, hi, key
+        lo = hi
 
 
 class HorizonPlanner:

@@ -94,3 +94,46 @@ def ravel_row(tree: Any, spec: FlatSpec) -> jnp.ndarray:
     """Single-model pytree -> (P,) f32 vector (inverse of ``unravel_row``)."""
     leaves = jax.tree.leaves(tree)
     return jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+
+
+def nbytes_of(spec: FlatSpec) -> int:
+    """Bytes of ONE row's pytree at its original dtypes (Eq. 10 pricing).
+
+    The flat buffer stores f32, but transfer accounting must price the model
+    as shipped (bf16 leaves ship at 2 bytes), so size from the spec's dtypes.
+    """
+    return sum(s * np.dtype(d).itemsize for s, d in zip(spec.sizes, spec.dtypes))
+
+
+# --------------------------------------------------------------------------- #
+# multi-buffer fleets: params + optimizer state resident together
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """Ravel/unravel metadata for a fleet that is resident as TWO flat
+    buffers: params ``(N, P)`` and optimizer state ``(N, S)``.
+
+    The LM plane flattens once at fleet init and keeps both buffers on device
+    for the fleet's lifetime — mixing is a matmul over ``params`` rows, local
+    training gathers the activated rows of BOTH buffers, and pytrees are
+    materialized only at checkpoint/eval-by-pytree boundaries.  Hashable
+    (two hashable ``FlatSpec``s), so it rides through ``jax.jit`` closures
+    and static arguments exactly like a single-buffer spec.
+    """
+    params: FlatSpec
+    opt: FlatSpec
+
+
+def flatten_fleet(stacked_params: Any, stacked_opt: Any
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, FleetSpec]:
+    """Stacked (params, opt) pytrees -> ((N, P), (N, S) f32 buffers, spec).
+
+    Integer leaves (optimizer step counters) are stored as f32 — exact for
+    any realistic round count (< 2^24) — and cast back by ``unflatten`` /
+    ``unravel_row`` through the spec's recorded dtypes.
+    """
+    pbuf, pspec = flatten_stacked(stacked_params)
+    obuf, ospec = flatten_stacked(stacked_opt)
+    return pbuf, obuf, FleetSpec(params=pspec, opt=ospec)

@@ -1,12 +1,27 @@
-"""DFL over the model zoo: workers train real architectures (any registry
-arch) instead of the MLP proxy.
+"""DFL over the model zoo: a device-resident, planner-driven LM fleet.
 
 The protocol layer is unchanged — DySTop only needs param pytrees, a local
 step, and byte counts — which is exactly the arch-agnosticism claim of
-DESIGN.md §4, demonstrated end-to-end here.  Worker models are one stacked
-pytree (leading worker axis); local training is a masked vmap of the
-production train step; aggregation reuses ``core.aggregation`` (and therefore
-the Pallas ``aggregate`` kernel).
+DESIGN.md §4, demonstrated end-to-end here on the SAME engine as the
+simulation plane:
+
+  * ``LMFleet`` holds all N replicas' params AND optimizer state as two
+    resident flat buffers — ``(N, P)`` / ``(N, S)`` f32, ravel metadata in a
+    ``flat_state.FleetSpec`` — flattened ONCE at init; pytrees are
+    materialized only at checkpoint/eval-by-pytree boundaries (the
+    ``stacked_params`` / ``stacked_opt`` properties).
+  * ``core.planner.HorizonPlanner`` drives the control plane; bucket-uniform
+    chunks of ``PlannedRound``s (``core.planner.chunk_spans``) dispatch as
+    ONE donated ``lax.scan`` mega-round (``LMEngine``), with row- or
+    column-sparse Eq. 4 mixing picked per chunk by the
+    ``aggregation.prefer_cols`` traffic model and the ``mix_is_train``
+    fusion feeding Eq. 4 output straight into Eq. 5.
+  * local training is a GATHERED-ACTIVE-ROW step: only the k activated
+    workers' rows are gathered, vmapped through AD + the generic
+    ``Optimizer.update`` (adam/sgd/adafactor — any state pytree), and
+    scattered back.  The pre-PR-4 architecture (per-call-flatten mixing +
+    train-all-N-and-mask step) is kept as the flag-gated correctness oracle
+    (``LMRunConfig.resident_fleet=False``).
 
 CPU-budget note: use smoke-geometry configs (``registry.get_smoke_config``)
 for interactive runs; the code path is identical for full configs on real
@@ -15,15 +30,23 @@ hardware.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Iterator, Optional, Tuple
+import functools
+import time
+from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.aggregation import mixing_rows, prefer_cols
+from repro.core.planner import (HorizonPlanner, PlannedRound, chunk_spans,
+                                mix_is_train)
 from repro.data.synthetic import make_token_stream
 from repro.dfl import flat_state as FS
+from repro.dfl import worker as WK
+from repro.dfl.network import (EdgeNetwork, NetworkConfig,
+                               heterogeneous_compute_times)
 from repro.models import registry as R
 from repro.optim import Optimizer, get_optimizer
 
@@ -32,23 +55,65 @@ Params = Dict[str, Any]
 
 @dataclasses.dataclass
 class LMFleet:
-    """N worker replicas of one architecture + their optimizer states."""
+    """N worker replicas of one architecture, device-resident for life.
+
+    ``pbuf`` (N, P) and ``obuf`` (N, S) are the ONLY materialized storage;
+    ``spec`` carries the ravel metadata for both.  The ``stacked_params`` /
+    ``stacked_opt`` properties materialize (and, on assignment, re-flatten)
+    the stacked pytrees — that round-trip is exact (f32 storage holds bf16
+    params and int32 step counters losslessly) and is the per-call cost the
+    legacy oracle path pays on every round, which the resident engine pays
+    never.
+    """
     cfg: ModelConfig
-    stacked_params: Params          # leaves: (N, ...)
-    stacked_opt: Params
+    pbuf: jnp.ndarray               # (N, P) f32 resident params
+    obuf: jnp.ndarray               # (N, S) f32 resident optimizer state
+    spec: FS.FleetSpec
     optimizer: Optimizer
     n_workers: int
 
     @property
+    def stacked_params(self) -> Params:
+        """Stacked param pytree (leaves (N, ...)) — checkpoint/oracle view."""
+        return FS.unflatten(self.pbuf, self.spec.params)
+
+    @stacked_params.setter
+    def stacked_params(self, value: Params) -> None:
+        self.pbuf, pspec = FS.flatten_stacked(value)
+        self.spec = FS.FleetSpec(params=pspec, opt=self.spec.opt)
+
+    @property
+    def stacked_opt(self) -> Params:
+        return FS.unflatten(self.obuf, self.spec.opt)
+
+    @stacked_opt.setter
+    def stacked_opt(self, value: Params) -> None:
+        self.obuf, ospec = FS.flatten_stacked(value)
+        self.spec = FS.FleetSpec(params=self.spec.params, opt=ospec)
+
+    @property
     def model_bytes(self) -> int:
-        one = jax.tree.map(lambda l: l[0], self.stacked_params)
-        return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(one))
+        """Bytes of one replica at its shipped dtypes (Eq. 10 pricing)."""
+        return FS.nbytes_of(self.spec.params)
+
+    @property
+    def opt_bytes(self) -> int:
+        return FS.nbytes_of(self.spec.opt)
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_optimizer(name: str, lr: float) -> Optimizer:
+    """One ``Optimizer`` instance per (name, lr): optimizers are frozen and
+    stateless, and a stable instance keys the jit/engine caches so repeated
+    ``run_lm_federation`` calls (tests, benchmark reps) stay compile-warm."""
+    return get_optimizer(name, lr)
 
 
 def init_fleet(cfg: ModelConfig, n_workers: int, optimizer: str = "adam",
                lr: float = 1e-3, seed: int = 0) -> LMFleet:
-    """All workers start from w_0 (paper Thm. 1's shared init)."""
-    opt = get_optimizer(optimizer, lr)
+    """All workers start from w_0 (paper Thm. 1's shared init) — flattened
+    ONCE into the resident buffers; no pytree survives past this call."""
+    opt = _cached_optimizer(optimizer, lr)
     params, _ = R.init_params(cfg, jax.random.PRNGKey(seed))
     opt_state = opt.init(params)
 
@@ -56,8 +121,8 @@ def init_fleet(cfg: ModelConfig, n_workers: int, optimizer: str = "adam",
         return jax.tree.map(
             lambda l: jnp.broadcast_to(l[None], (n_workers,) + l.shape).copy(), tree)
 
-    return LMFleet(cfg=cfg, stacked_params=stack(params),
-                   stacked_opt=stack(opt_state), optimizer=opt,
+    pbuf, obuf, spec = FS.flatten_fleet(stack(params), stack(opt_state))
+    return LMFleet(cfg=cfg, pbuf=pbuf, obuf=obuf, spec=spec, optimizer=opt,
                    n_workers=n_workers)
 
 
@@ -66,41 +131,49 @@ def worker_streams(cfg: ModelConfig, n_workers: int, batch: int, seq: int,
                    ) -> Iterator[Dict[str, np.ndarray]]:
     """Per-worker token batches.  Non-IID-ness: each worker samples from a
     different slice of a long stream (distinct local distributions, the LM
-    analogue of the Dirichlet class skew)."""
+    analogue of the Dirichlet class skew).
+
+    Vectorized: one zero-copy ``sliding_window_view`` over the stream, one
+    fancy-indexed gather per yield — replacing the per-worker per-batch
+    Python slicing loop.  The per-worker ``rng.integers`` draws are kept
+    EXACTLY as the scalar loop made them (same call order, same bounds): the
+    rng stream is the trajectory, so only the transform is vectorized.
+    """
     stream = make_token_stream(cfg.vocab_size, 400_000, seed=seed)
     n = len(stream) - seq - 1
     rng = np.random.default_rng(seed)
     slice_len = n // n_workers if noniid_offset else n
+    # row s of the view is stream[s : s + seq + 1] — tokens + shifted labels
+    windows = np.lib.stride_tricks.sliding_window_view(stream, seq + 1)
     while True:
-        tok = np.empty((n_workers, batch, seq), np.int32)
-        lab = np.empty((n_workers, batch, seq), np.int32)
+        starts = np.empty((n_workers, batch), np.int64)
         for w in range(n_workers):
             lo = w * slice_len % max(n - slice_len, 1) if noniid_offset else 0
-            starts = rng.integers(lo, lo + max(slice_len - seq - 1, 1), size=batch)
-            for b, s in enumerate(starts):
-                tok[w, b] = stream[s:s + seq]
-                lab[w, b] = stream[s + 1:s + seq + 1]
-        yield {"tokens": tok, "labels": lab,
+            starts[w] = rng.integers(lo, lo + max(slice_len - seq - 1, 1),
+                                     size=batch)
+        win = windows[starts]                   # ONE gather: (W, B, seq + 1)
+        yield {"tokens": np.ascontiguousarray(win[..., :-1]),
+               "labels": np.ascontiguousarray(win[..., 1:]),
                "loss_mask": np.ones((n_workers, batch, seq), np.float32)}
 
 
-def fleet_mix(fleet: LMFleet, W: np.ndarray,
-              active: Optional[np.ndarray] = None,
-              links: Optional[np.ndarray] = None,
-              use_kernel: bool = False) -> None:
-    """Eq. 4 over the fleet as ONE flat (N, P) matmul instead of per-leaf
-    ``apply_mixing`` dispatches.
+# --------------------------------------------------------------------------- #
+# per-call-flatten oracle plane (the pre-resident architecture, flag-gated)
+# --------------------------------------------------------------------------- #
 
-    When ``active``/``links`` are given, only the k non-identity rows of W are
-    computed — the same gather -> (k, N) @ (N, P) -> scatter path as the
-    simulation plane's fused engine.  Real architectures have many leaves
-    (the transformer zoo: dozens), so collapsing to one skinny matmul removes
-    a dispatch per leaf per round.
+
+def fleet_mix_stacked(stacked_params: Params, W: np.ndarray,
+                      active: Optional[np.ndarray] = None,
+                      links: Optional[np.ndarray] = None,
+                      use_kernel: bool = False) -> Params:
+    """Eq. 4 over a STACKED param pytree, re-flattening per call.
+
+    The pre-PR-4 mixing path, kept as the correctness oracle and the
+    benchmark baseline: flatten the whole fleet, run the same gather ->
+    (k, N) @ (N, P) -> scatter contraction as the resident engine, unflatten
+    back to the pytree the masked train step consumes.
     """
-    from repro.core.aggregation import mixing_rows
-    from repro.dfl import worker as WK
-
-    buf, spec = FS.flatten_stacked(fleet.stacked_params)
+    buf, spec = FS.flatten_stacked(stacked_params)
     if active is not None and links is not None:
         w_rows, row_ids = mixing_rows(np.asarray(W, np.float32), active, links)
         buf = WK.mix_flat(buf, jnp.asarray(w_rows), jnp.asarray(row_ids),
@@ -110,13 +183,40 @@ def fleet_mix(fleet: LMFleet, W: np.ndarray,
         buf = K.aggregate(jnp.asarray(W, jnp.float32), buf)
     else:
         buf = jnp.asarray(W, jnp.float32) @ buf
-    fleet.stacked_params = FS.unflatten(buf, spec)
+    return FS.unflatten(buf, spec)
+
+
+def fleet_mix(fleet: LMFleet, W: np.ndarray,
+              active: Optional[np.ndarray] = None,
+              links: Optional[np.ndarray] = None,
+              use_kernel: bool = False) -> None:
+    """Eq. 4 over the RESIDENT fleet buffer — no flatten, no pytree.
+
+    When ``active``/``links`` are given, only the k non-identity rows of W
+    are computed — the same gather -> (k, N) @ (N, P) -> scatter path as the
+    simulation plane's fused engine.
+    """
+    if active is not None and links is not None:
+        w_rows, row_ids = mixing_rows(np.asarray(W, np.float32), active, links)
+        fleet.pbuf = WK.mix_flat(fleet.pbuf, jnp.asarray(w_rows),
+                                 jnp.asarray(row_ids), use_kernel=use_kernel)
+    elif use_kernel:
+        from repro.kernels import ops as K
+        fleet.pbuf = K.aggregate(jnp.asarray(W, jnp.float32), fleet.pbuf)
+    else:
+        fleet.pbuf = jnp.asarray(W, jnp.float32) @ fleet.pbuf
 
 
 def make_fleet_step(fleet: LMFleet):
-    """Masked per-worker train step: only activated workers move."""
-    cfg, opt = fleet.cfg, fleet.optimizer
+    """Masked per-worker train step over STACKED pytrees: trains ALL N
+    workers and masks the inactive updates away.  The pre-PR-4 oracle the
+    gathered-active-row engine is pinned against — O(N) model-plane work per
+    round regardless of how few workers activated."""
+    return _fleet_step(fleet.cfg, fleet.optimizer)
 
+
+@functools.lru_cache(maxsize=None)
+def _fleet_step(cfg: ModelConfig, opt: Optimizer):
     def one(params, opt_state, batch, active):
         def loss_fn(p):
             return R.compute_loss(cfg, p, batch)
@@ -135,11 +235,361 @@ def make_fleet_step(fleet: LMFleet):
     return jax.jit(jax.vmap(one))
 
 
-def fleet_eval(fleet: LMFleet, batch: Dict[str, jnp.ndarray],
-               alpha: jnp.ndarray) -> float:
-    """Loss of the data-size-weighted global model (paper Eq. 11)."""
+def fleet_eval_stacked(cfg: ModelConfig, stacked_params: Params,
+                       batch: Dict[str, jnp.ndarray],
+                       alpha: jnp.ndarray) -> float:
+    """Eq. 11 eval through the stacked pytree (per-leaf tensordot) — the
+    eval-by-pytree oracle twin of ``fleet_eval``."""
     gm = jax.tree.map(lambda l: jnp.tensordot(alpha, l.astype(jnp.float32),
                                               axes=1).astype(l.dtype),
-                      fleet.stacked_params)
+                      stacked_params)
+    loss, _ = R.compute_loss(cfg, gm, batch)
+    return float(loss)
+
+
+def fleet_eval(fleet: LMFleet, batch: Dict[str, jnp.ndarray],
+               alpha: jnp.ndarray) -> float:
+    """Loss of the data-size-weighted global model (paper Eq. 11),
+    flat-native: one ``alpha @ pbuf`` matvec (``flat_state.weighted_row``)
+    plus a static unravel — no stacked pytree is materialized."""
+    gm = FS.unravel_row(FS.weighted_row(fleet.pbuf, alpha),
+                        fleet.spec.params)
     loss, _ = R.compute_loss(fleet.cfg, gm, batch)
     return float(loss)
+
+
+# --------------------------------------------------------------------------- #
+# the resident engine: gathered-active-row rounds as lax.scan mega-dispatches
+# --------------------------------------------------------------------------- #
+
+
+_ENGINE_CACHE: Dict[tuple, "LMEngine"] = {}
+
+
+def get_lm_engine(cfg: ModelConfig, optimizer: Optimizer,
+                  spec: FS.FleetSpec, use_kernel: bool = False) -> "LMEngine":
+    """One ``LMEngine`` per (cfg, optimizer, spec, use_kernel): the engine
+    owns the jitted scan variants, so sharing it across runs keeps repeated
+    federations (benchmark reps, test A/Bs) compile-warm."""
+    key = (cfg, optimizer, spec, use_kernel)
+    if key not in _ENGINE_CACHE:
+        _ENGINE_CACHE[key] = LMEngine(cfg, optimizer, spec,
+                                      use_kernel=use_kernel)
+    return _ENGINE_CACHE[key]
+
+
+class LMEngine:
+    """Jitted round dispatch for one fleet's (cfg, optimizer, spec) triple.
+
+    ``dispatch_chunk`` executes a bucket-uniform chunk of ``PlannedRound``s
+    as ONE donated ``lax.scan``: per scan step, Eq. 4 mixes the k
+    non-identity rows (row- or column-sparse exactly like the simulation
+    plane, via ``worker.mix_flat`` / ``mix_flat_cols``), then the gathered
+    activated rows of BOTH buffers run one AD train step through the generic
+    ``Optimizer.update`` and scatter back — inactive rows are never touched,
+    so model-plane work is O(k), not O(N).  Under the ``mix_is_train``
+    fusion (mix rows == train rows, every DySTop round) the mixed sub-buffer
+    feeds the train step directly, skipping the intermediate scatter.
+
+    Jits are cached per (col_sparse, fuse) variant; shapes bucket through
+    ``pack_horizon``, so the compile count stays O(log N) per variant.
+    """
+
+    def __init__(self, cfg: ModelConfig, optimizer: Optimizer,
+                 spec: FS.FleetSpec, use_kernel: bool = False):
+        self.cfg, self.opt, self.spec = cfg, optimizer, spec
+        self.use_kernel = use_kernel
+        self._mega_cache: dict = {}
+
+    # -- gathered-active-row train: vmap over the k activated workers only --
+    def _train_rows(self, psub, osub, mask, tok, lab):
+        cfg, opt, spec = self.cfg, self.opt, self.spec
+
+        def one(pvec, ovec, m, t, l):
+            params = FS.unravel_row(pvec, spec.params)
+            state = FS.unravel_row(ovec, spec.opt)
+            batch = {"tokens": t, "labels": l,
+                     "loss_mask": jnp.ones(t.shape, jnp.float32)}
+            (loss, _), grads = jax.value_and_grad(
+                lambda p: R.compute_loss(cfg, p, batch),
+                has_aux=True)(params)
+            new_p, new_s = opt.update(grads, state, params)
+            keep = m > 0          # padding rows: bit-identical no-op
+            return (jnp.where(keep, FS.ravel_row(new_p, spec.params), pvec),
+                    jnp.where(keep, FS.ravel_row(new_s, spec.opt), ovec),
+                    loss * m)
+
+        return jax.vmap(one)(psub, osub, mask, tok, lab)
+
+    def _round_body(self, pbuf, obuf, w, mids, cids, tids, mask, tok, lab,
+                    fuse: bool):
+        n = pbuf.shape[0]
+        k_mix, k_train = w.shape[0], tids.shape[0]
+        losses = jnp.zeros((n,), jnp.float32)
+        if fuse and k_mix and k_train:
+            # mix rows == train rows: Eq. 4 output feeds Eq. 5 directly
+            sub = WK._mix_rows(pbuf, w, cids, self.use_kernel)
+            new_p, new_o, sl = self._train_rows(sub, obuf[tids], mask,
+                                                tok[tids], lab[tids])
+            return (pbuf.at[tids].set(new_p), obuf.at[tids].set(new_o),
+                    losses.at[tids].set(sl))
+        if k_mix:
+            pbuf = (WK.mix_flat_cols(pbuf, w, mids, cids, self.use_kernel)
+                    if cids is not None
+                    else WK.mix_flat(pbuf, w, mids, self.use_kernel))
+        if k_train:
+            new_p, new_o, sl = self._train_rows(pbuf[tids], obuf[tids], mask,
+                                                tok[tids], lab[tids])
+            pbuf = pbuf.at[tids].set(new_p)
+            obuf = obuf.at[tids].set(new_o)
+            losses = losses.at[tids].set(sl)
+        return pbuf, obuf, losses
+
+    def _mega(self, col_sparse: bool, fuse: bool):
+        if (col_sparse, fuse) in self._mega_cache:
+            return self._mega_cache[(col_sparse, fuse)]
+
+        @functools.partial(jax.jit, donate_argnums=(0, 1))
+        def mega(pbuf, obuf, w_rows, ctrl, tokens, labels):
+            k_mix = w_rows.shape[1]
+            u = w_rows.shape[2] if col_sparse and k_mix else 0
+            mix_ids, col_ids, train_ids, masks = WK.split_ctrl(ctrl, k_mix, u)
+            if col_ids is not None:
+                def body(c, xs):
+                    w, mi, ci, ti, m, tk, lb = xs
+                    pb, ob, ls = self._round_body(c[0], c[1], w, mi, ci, ti,
+                                                  m, tk, lb, fuse)
+                    return (pb, ob), ls
+                xs = (w_rows, mix_ids, col_ids, train_ids, masks,
+                      tokens, labels)
+            else:
+                def body(c, xs):
+                    w, mi, ti, m, tk, lb = xs
+                    pb, ob, ls = self._round_body(c[0], c[1], w, mi, None,
+                                                  ti, m, tk, lb, fuse)
+                    return (pb, ob), ls
+                xs = (w_rows, mix_ids, train_ids, masks, tokens, labels)
+            (pbuf, obuf), losses = jax.lax.scan(body, (pbuf, obuf), xs)
+            return pbuf, obuf, losses
+
+        self._mega_cache[(col_sparse, fuse)] = mega
+        return mega
+
+    def dispatch_chunk(self, pbuf, obuf, chunk: List[PlannedRound],
+                       tokens: np.ndarray, labels: np.ndarray, *,
+                       col_sparse: bool, fuse: bool, min_bucket: int = 8
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """One bucket-uniform chunk -> one donated scan dispatch.
+
+        ``tokens``/``labels`` are the full-N per-round batches (H, N, B, S);
+        the activated rows are gathered ON DEVICE by the packed train ids,
+        so the host never re-shapes batches per activation pattern.
+        Returns (new pbuf, new obuf, (H, N) per-round losses — zero rows for
+        idle workers).
+        """
+        w, c, _ = WK.pack_horizon(chunk, min_bucket=min_bucket,
+                                  col_sparse=col_sparse)
+        return self._mega(col_sparse, fuse)(
+            pbuf, obuf, jnp.asarray(w), jnp.asarray(c),
+            jnp.asarray(tokens), jnp.asarray(labels))
+
+    @functools.cached_property
+    def eval_global(self):
+        """Jitted Eq. 11 eval: ``alpha @ pbuf`` + unravel + one forward."""
+        cfg, spec = self.cfg, self.spec
+
+        @jax.jit
+        def ev(pbuf, alpha, tokens, labels):
+            gm = FS.unravel_row(FS.weighted_row(pbuf, alpha), spec.params)
+            batch = {"tokens": tokens, "labels": labels,
+                     "loss_mask": jnp.ones(tokens.shape, jnp.float32)}
+            loss, _ = R.compute_loss(cfg, gm, batch)
+            return loss
+
+        return ev
+
+
+# --------------------------------------------------------------------------- #
+# planner-driven federation driver (both planes share the control plane)
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class LMRunConfig:
+    """LM-plane run configuration (the SimConfig of the LM fleet).
+
+    ``resident_fleet`` gates the tentpole: True (default) runs the
+    device-resident gathered-active-row engine with ``scan_horizon``
+    mega-rounds; False runs the per-call-flatten oracle (stacked pytrees,
+    ``fleet_mix_stacked`` + the masked train-all-N step) on the IDENTICAL
+    control plane — trajectories are bit-for-bit equal, model state equal to
+    f32 tolerance (pinned by ``tests/test_lm_fleet.py``).  ``min_bucket=2``:
+    LM fleets are small (8-64 workers), so fine-grained shape buckets keep
+    the gathered row set near the true activation count.
+    """
+    n_workers: int = 8
+    n_rounds: int = 30
+    batch: int = 4
+    seq: int = 64
+    optimizer: str = "adam"
+    lr: float = 1e-3
+    scan_horizon: int = 8
+    resident_fleet: bool = True
+    col_sparse_mix: bool = True
+    min_bucket: int = 2
+    eval_every: int = 5
+    seed: int = 0
+    tau_bound: int = 4
+    bandwidth_budget: float = 6.0
+    link_timeout_s: float = 5.0
+    sync_link_timeout_s: float = 30.0
+    comm_range_m: float = 80.0
+    compute_sigma: float = 0.6
+    use_kernel: bool = False
+
+
+@dataclasses.dataclass
+class LMHistory:
+    """Trajectory of one LM federation run (units as ``simulator.History``:
+    sim_time in simulated seconds, comm in GB, staleness in rounds,
+    ``wall_s``/``eval_wall_s``/``setup_wall_s`` in real host seconds)."""
+    rounds: List[int] = dataclasses.field(default_factory=list)
+    sim_time: List[float] = dataclasses.field(default_factory=list)
+    comm_gb: List[float] = dataclasses.field(default_factory=list)
+    loss_global: List[float] = dataclasses.field(default_factory=list)
+    loss_local: List[float] = dataclasses.field(default_factory=list)
+    staleness_avg: List[float] = dataclasses.field(default_factory=list)
+    staleness_max: List[int] = dataclasses.field(default_factory=list)
+    round_durations: List[float] = dataclasses.field(default_factory=list)
+    round_active: List[int] = dataclasses.field(default_factory=list)
+    round_loss: List[float] = dataclasses.field(default_factory=list)
+    wall_s: float = 0.0
+    eval_wall_s: float = 0.0
+    setup_wall_s: float = 0.0
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def run_lm_federation(mechanism, cfg: ModelConfig, run: LMRunConfig
+                      ) -> Tuple[LMFleet, LMHistory]:
+    """Federate N replicas of ``cfg`` under ``mechanism``, planner-driven.
+
+    The ``HorizonPlanner`` owns ALL control state exactly as in
+    ``run_simulation``; one token-stream draw happens per planned round in
+    plan order on BOTH engine paths, so the batch trajectory — like the
+    control trajectory — is bit-for-bit independent of
+    ``resident_fleet``/``scan_horizon``.
+    """
+    t_wall = time.time()
+    n = run.n_workers
+    rng = np.random.default_rng(run.seed)
+    fleet = init_fleet(cfg, n, optimizer=run.optimizer, lr=run.lr,
+                       seed=run.seed)
+    streams = worker_streams(cfg, n, run.batch, run.seq, seed=run.seed)
+    ev = next(worker_streams(cfg, 1, run.batch, run.seq, seed=run.seed + 1))
+    eval_tok = jnp.asarray(ev["tokens"][0])
+    eval_lab = jnp.asarray(ev["labels"][0])
+    net = EdgeNetwork(NetworkConfig(n_workers=n,
+                                    comm_range_m=run.comm_range_m), rng)
+    h_i = heterogeneous_compute_times(n, 1.0, rng, sigma=run.compute_sigma)
+    model_bytes = float(fleet.model_bytes)
+    planner = HorizonPlanner(
+        mechanism, h_i=h_i, in_range=net.in_range(),
+        exp_link_time=net.expected_link_time(model_bytes),
+        model_bytes=model_bytes, class_counts=np.ones((n, 2)),
+        data_sizes=np.ones(n), net=net, rng=rng, tau_bound=run.tau_bound,
+        bandwidth_budget=run.bandwidth_budget,
+        link_timeout_s=run.link_timeout_s,
+        sync_link_timeout_s=run.sync_link_timeout_s)
+    alpha = jnp.full((n,), 1.0 / n, jnp.float32)
+    hist = LMHistory()
+
+    if run.resident_fleet:
+        engine = get_lm_engine(cfg, fleet.optimizer, fleet.spec,
+                               use_kernel=run.use_kernel)
+        horizon = max(1, run.scan_horizon)
+        sp = so = step = None
+    else:
+        engine = None
+        horizon = 1                       # the oracle dispatches per round
+        sp, so = fleet.stacked_params, fleet.stacked_opt   # pytrees, ONCE
+        step = make_fleet_step(fleet)
+    hist.setup_wall_s = time.time() - t_wall
+
+    pending: List[Tuple[PlannedRound, Dict[str, np.ndarray]]] = []
+    loss_rows: List[Tuple[Any, np.ndarray]] = []   # ((N,) device loss, active)
+
+    def flush():
+        nonlocal sp, so
+        plans = [p for p, _ in pending]
+        if run.resident_fleet:
+            for lo, hi, key in chunk_spans(plans, n,
+                                           col_sparse=run.col_sparse_mix,
+                                           min_bucket=run.min_bucket):
+                chunk = plans[lo:hi]
+                col = run.col_sparse_mix and prefer_cols(key[0], key[2], n)
+                fuse = all(mix_is_train(p) for p in chunk)
+                tokens = np.stack([b["tokens"] for _, b in pending[lo:hi]])
+                labels = np.stack([b["labels"] for _, b in pending[lo:hi]])
+                fleet.pbuf, fleet.obuf, losses = engine.dispatch_chunk(
+                    fleet.pbuf, fleet.obuf, chunk, tokens, labels,
+                    col_sparse=col, fuse=fuse, min_bucket=run.min_bucket)
+                for j, p in enumerate(chunk):
+                    loss_rows.append((losses[j], p.active))
+        else:
+            for p, b in pending:
+                sp = fleet_mix_stacked(sp, p.W, p.active, p.links,
+                                       use_kernel=run.use_kernel)
+                batch = {k: jnp.asarray(v) for k, v in b.items()}
+                sp, so, losses = step(sp, so, batch, jnp.asarray(p.active))
+                loss_rows.append((losses, p.active))
+        pending.clear()
+
+    def drain_losses():
+        """Materialize queued per-round losses (device sync happens at eval
+        boundaries only, so round dispatches stay queued in between)."""
+        for losses, active in loss_rows:
+            row = np.asarray(losses)
+            hist.round_loss.append(float(row[active].mean())
+                                   if active.any() else 0.0)
+        loss_rows.clear()
+
+    while planner.t < run.n_rounds:
+        p = planner.plan_round()
+        b = next(streams)                 # one draw per round, EITHER path
+        hist.round_durations.append(p.duration)
+        hist.round_active.append(int(p.active.sum()))
+        pending.append((p, b))
+        do_eval = p.t % run.eval_every == 0 or p.t == run.n_rounds
+        if do_eval or len(pending) >= horizon:
+            flush()
+        if do_eval:
+            jax.block_until_ready(fleet.pbuf if run.resident_fleet
+                                  else jax.tree.leaves(sp)[0])
+            t_ev = time.time()
+            drain_losses()
+            if run.resident_fleet:
+                lg = float(engine.eval_global(fleet.pbuf, alpha,
+                                              eval_tok, eval_lab))
+            else:
+                lg = fleet_eval_stacked(
+                    cfg, sp, {"tokens": eval_tok, "labels": eval_lab,
+                              "loss_mask": jnp.ones(eval_tok.shape,
+                                                    jnp.float32)}, alpha)
+            hist.rounds.append(p.t)
+            hist.sim_time.append(planner.sim_clock)
+            hist.comm_gb.append(planner.comm_bytes / 1e9)
+            hist.loss_global.append(lg)
+            hist.loss_local.append(hist.round_loss[-1])
+            hist.staleness_avg.append(float(planner.st.tau.mean()))
+            hist.staleness_max.append(int(planner.st.tau.max()))
+            hist.eval_wall_s += time.time() - t_ev
+
+    flush()
+    drain_losses()
+    if not run.resident_fleet:
+        fleet.stacked_params = sp         # write the oracle state back once
+        fleet.stacked_opt = so
+    hist.wall_s = time.time() - t_wall
+    return fleet, hist

@@ -21,10 +21,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import (apply_mixing, bucket_size, col_union_mask,
-                                    mixing_rows, mixing_rows_cols,
-                                    padded_rows, plan_buckets)
-from repro.core.planner import HorizonPlanner, PlannedRound
+from repro.core.aggregation import (apply_mixing, mixing_rows,
+                                    mixing_rows_cols, padded_rows,
+                                    prefer_cols)
+from repro.core.planner import (HorizonPlanner, PlannedRound, chunk_spans,
+                                mix_is_train)
 from repro.core.protocol import Mechanism
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import (ClassificationData, make_classification,
@@ -225,50 +226,34 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
     fused_sgd = (cfg.fused_engine and cfg.fused_local_sgd
                  and WK.fused_sgd_supported(flat_spec))
 
-    def bucket_key(p):
-        """Power-of-two shape buckets of a planned round — (k_mix, k_train)
-        plus, under the column-sparse mix, the bucket of the planner-resolved
-        nonzero-column union (every round of a scan chunk must share one
-        (k, u) contraction shape)."""
-        base = plan_buckets(p.active, p.links)
-        if not cfg.col_sparse_mix:
-            return base
-        cols = (p.mix_cols if p.mix_cols is not None
-                else col_union_mask(p.active, p.links))
-        return base + (bucket_size(int(cols.sum()), cfg.n_workers),)
-
-    def mix_is_train(p):
-        """True iff the round's mix rows equal its train rows (every DySTop
-        round: only activated workers pull), letting the fused lowering feed
-        Eq. 4 output straight into Eq. 5 — bit-identical, one scatter less."""
-        return not (p.links.any(axis=1) & ~p.active).any()
+    def use_cols(key):
+        """Column-sparse contraction for a chunk with these shape buckets?
+        The per-chunk traffic model (``aggregation.prefer_cols``) picks the
+        cheaper contraction from the bucketed (k_mix, u) shapes actually
+        dispatched — subsuming the old binary u = N fallback, so the column
+        path is never a pessimization."""
+        return cfg.col_sparse_mix and prefer_cols(key[0], key[2],
+                                                  cfg.n_workers)
 
     def flush(plans):
         """Dispatch the pending planned rounds to the model plane (Eq. 4+5).
 
-        Fused path: consecutive rounds sharing one (k_mix, k_train) shape
-        bucket go out as one ``lax.scan`` mega-round; the chunk is split at
-        bucket changes rather than padded to the horizon max, so no round
-        ever pays a larger bucket than its own single-dispatch shape (in the
-        steady regime buckets rarely change, so chunks stay horizon-length).
+        Fused path: consecutive rounds sharing one shape-bucket key
+        (``core.planner.bucket_key``) go out as one ``lax.scan`` mega-round;
+        ``core.planner.chunk_spans`` splits at bucket changes rather than
+        padding to the horizon max, so no round ever pays a larger bucket
+        than its own single-dispatch shape (in the steady regime buckets
+        rarely change, so chunks stay horizon-length).
         """
         nonlocal buf, stacked
         if cfg.fused_engine:
-            while len(plans) > 1:
-                run = 1
-                while (run < len(plans)
-                       and bucket_key(plans[run]) == bucket_key(plans[0])):
-                    run += 1
-                if run == 1:
-                    flush(plans[:1])
-                else:
-                    # a union bucket that reaches N degenerates to the
-                    # row-sparse contraction plus a pointless (N, P) gather —
-                    # fall back host-side so col_sparse_mix is never slower
-                    col = (cfg.col_sparse_mix
-                           and bucket_key(plans[0])[2] < cfg.n_workers)
+            for lo, hi, key in chunk_spans(plans, cfg.n_workers,
+                                           col_sparse=cfg.col_sparse_mix):
+                chunk = plans[lo:hi]
+                col = use_cols(key)
+                if len(chunk) > 1:
                     w_rows_h, ctrl_h, ts = WK.pack_horizon(
-                        plans[:run], col_sparse=col)
+                        chunk, col_sparse=col)
                     buf, _ = WK.mega_round_step(
                         buf, jnp.asarray(w_rows_h), jnp.asarray(ctrl_h),
                         jnp.asarray(ts), data_x, data_y, part_idx,
@@ -279,15 +264,12 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
                         with_losses=False,
                         mix_is_train=(fused_sgd
                                       and all(mix_is_train(p)
-                                              for p in plans[:run])))
-                plans = plans[run:]
-            if len(plans) == 1:
+                                              for p in chunk)))
+                    continue
                 # single-round path: one donated round_step dispatch; with
                 # col_sparse_mix/fused_local_sgd off this is bit-for-bit the
                 # pre-horizon PR 1 engine (the correctness oracle)
-                p = plans[0]
-                col = (cfg.col_sparse_mix
-                       and bucket_key(p)[2] < cfg.n_workers)
+                p = chunk[0]
                 if col:
                     w_rows, mix_ids, col_ids = mixing_rows_cols(
                         p.W, p.active, p.links, cols_mask=p.mix_cols)

@@ -364,6 +364,23 @@ def pack_round_ctrl(mix_row_ids: np.ndarray, train_row_ids: np.ndarray,
     return np.concatenate(segs)
 
 
+def split_ctrl(ctrl: jnp.ndarray, k_mix: int, u: int):
+    """Recover the ``pack_round_ctrl`` segments from a packed control vector
+    (or a stacked ``(H, ·)`` horizon of them — slicing is along the last
+    axis).  Returns ``(mix_ids, col_ids | None, train_ids, train_mask)``
+    with ``train_mask`` cast to f32; the segment boundaries are static
+    (derived from the jit-static ``k_mix``/``u`` shapes), so consumers —
+    ``round_step``, ``mega_round_step``, and the LM fleet engine — share one
+    layout definition.
+    """
+    k_train = (ctrl.shape[-1] - k_mix - u) // 2
+    mix_ids = ctrl[..., :k_mix]
+    col_ids = ctrl[..., k_mix:k_mix + u] if u else None
+    train_ids = ctrl[..., k_mix + u:k_mix + u + k_train]
+    train_mask = ctrl[..., k_mix + u + k_train:].astype(jnp.float32)
+    return mix_ids, col_ids, train_ids, train_mask
+
+
 def _mix_train_body(buf: jnp.ndarray, w_rows: jnp.ndarray,
                     mix_row_ids: jnp.ndarray, col_ids,
                     train_row_ids: jnp.ndarray,
@@ -451,11 +468,8 @@ def round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
     """
     k_mix = w_rows.shape[0]
     u = w_rows.shape[1] if col_sparse and k_mix else 0
-    k_train = (ctrl.shape[0] - k_mix - u) // 2
-    mix_row_ids = ctrl[:k_mix]
-    col_ids = ctrl[k_mix:k_mix + u] if col_sparse else None
-    train_row_ids = ctrl[k_mix + u:k_mix + u + k_train]
-    train_mask = ctrl[k_mix + u + k_train:].astype(jnp.float32)
+    mix_row_ids, col_ids, train_row_ids, train_mask = split_ctrl(ctrl, k_mix, u)
+    k_train = train_row_ids.shape[0]
     xb = yb = None
     if k_train:
         key = jax.random.fold_in(key, t)           # per-round stream, in-jit
@@ -572,11 +586,8 @@ def mega_round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
     """
     k_mix = w_rows.shape[1]
     u = w_rows.shape[2] if col_sparse and k_mix else 0
-    k_train = (ctrl.shape[1] - k_mix - u) // 2
-    mix_ids = ctrl[:, :k_mix]                                   # (H, k_mix)
-    col_ids = ctrl[:, k_mix:k_mix + u] if col_sparse else None  # (H, u)
-    train_ids = ctrl[:, k_mix + u:k_mix + u + k_train]          # (H, k_train)
-    masks = ctrl[:, k_mix + u + k_train:].astype(jnp.float32)   # (H, k_train)
+    mix_ids, col_ids, train_ids, masks = split_ctrl(ctrl, k_mix, u)
+    k_train = train_ids.shape[1]                   # (H, k) segments per round
     if k_train:
         keys = jax.vmap(jax.random.fold_in, (None, 0))(key, ts)
         xb, yb = jax.vmap(
@@ -586,7 +597,7 @@ def mega_round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
     else:
         xb = yb = jnp.zeros((ts.shape[0],), jnp.float32)        # scan filler
 
-    if col_sparse:
+    if col_ids is not None:
         def body(b, xs):
             w, mids, cids, tids, mask, x, y = xs
             return _mix_train_body(b, w, mids, cids, tids, mask, x, y, spec,

@@ -4,6 +4,14 @@ An ``Optimizer`` is a triple of pure functions; its state mirrors the param
 tree (so the param sharding specs apply leaf-for-leaf) plus a scalar step.
 ``state_axes`` returns the logical-axes tree for the state given the params'
 logical axes — used by the launcher to build NamedShardings.
+
+Flat-fleet residency contract: optimizer state must be a pytree of arrays
+whose structure is fixed by the param structure alone (no data-dependent
+shapes) and whose float leaves survive an f32 round-trip — the DFL LM plane
+(``dfl.flat_state.FleetSpec``) keeps N workers' states resident as one flat
+``(N, S)`` buffer and re-enters ``update`` through ``unravel_row`` per
+activated worker.  Every optimizer here satisfies it; integer step counters
+are stored exactly in f32 up to 2^24 rounds.
 """
 from __future__ import annotations
 
@@ -169,6 +177,9 @@ def adafactor(lr: float = 3e-4, decay: float = 0.8, eps: float = 1e-30,
     return Optimizer("adafactor", init, update, state_axes)
 
 
+OPTIMIZER_NAMES = ("adam", "sgd", "sgdm_bf16", "adafactor")
+
+
 def get_optimizer(name: str, lr: float = 3e-4) -> Optimizer:
     if name == "adam":
         return adam(lr)
@@ -178,4 +189,4 @@ def get_optimizer(name: str, lr: float = 3e-4) -> Optimizer:
         return sgdm_bf16(lr)
     if name == "adafactor":
         return adafactor(lr)
-    raise ValueError(f"unknown optimizer {name}")
+    raise ValueError(f"unknown optimizer {name}; one of {OPTIMIZER_NAMES}")

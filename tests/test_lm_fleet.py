@@ -1,10 +1,27 @@
-"""DFL over real zoo architectures (dfl/lm_worker.py)."""
+"""DFL over real zoo architectures (dfl/lm_worker.py).
+
+Oracle ladder for the resident LM plane (PR 4):
+  * ``resident_fleet=False`` — per-call-flatten mixing + masked
+    train-all-N step: control plane bit-for-bit, params + optimizer state
+    to f32 tolerance, for EVERY optimizer family;
+  * the planner-driven driver's control trajectory == an independently
+    hand-rolled ``Mechanism.round`` loop, exactly;
+  * ``worker_streams``'s stride-tricks gather == the scalar slicing loop,
+    token-for-token (the rng draw order is the trajectory).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.aggregation import apply_mixing, mixing_matrix
+from repro.core.protocol import DySTop, RoundContext
+from repro.core.staleness import StalenessState
+from repro.data.synthetic import make_token_stream
+from repro.dfl import flat_state as FS
 from repro.dfl import lm_worker as LW
+from repro.dfl.network import (EdgeNetwork, NetworkConfig,
+                               heterogeneous_compute_times)
 from repro.models import registry as R
 
 
@@ -65,3 +82,157 @@ def test_worker_streams_noniid_slices():
     assert b["labels"].shape == (4, 2, 16)
     # labels are next-token shifts of tokens within each sample
     assert (b["tokens"][0, 0, 1:] == b["labels"][0, 0, :-1]).all()
+
+
+def test_worker_streams_gather_matches_scalar_loop():
+    """The stride-tricks gather reproduces the scalar per-batch slicing loop
+    token-for-token across yields — same rng calls, same windows."""
+    cfg = R.get_smoke_config("smollm-135m")
+    n_workers, batch, seq, seed = 3, 4, 24, 5
+    stream = make_token_stream(cfg.vocab_size, 400_000, seed=seed)
+    n = len(stream) - seq - 1
+    rng = np.random.default_rng(seed)
+    slice_len = n // n_workers
+    gen = LW.worker_streams(cfg, n_workers, batch, seq, seed=seed)
+    for _ in range(3):
+        tok = np.empty((n_workers, batch, seq), np.int32)
+        lab = np.empty((n_workers, batch, seq), np.int32)
+        for w in range(n_workers):
+            lo = w * slice_len % max(n - slice_len, 1)
+            starts = rng.integers(lo, lo + max(slice_len - seq - 1, 1),
+                                  size=batch)
+            for b, s in enumerate(starts):
+                tok[w, b] = stream[s:s + seq]
+                lab[w, b] = stream[s + 1:s + seq + 1]
+        got = next(gen)
+        np.testing.assert_array_equal(got["tokens"], tok)
+        np.testing.assert_array_equal(got["labels"], lab)
+
+
+# --------------------------------------------------------------------------- #
+# resident fleet: FleetSpec round-trips + planner-driven engine oracles
+# --------------------------------------------------------------------------- #
+
+
+def test_fleet_spec_roundtrip_exact():
+    """pbuf/obuf <-> stacked pytree round-trips are exact: bf16 params and
+    int32 step counters survive the f32 buffers bit-for-bit."""
+    cfg = R.get_smoke_config("smollm-135m")
+    fleet = LW.init_fleet(cfg, 3, optimizer="adam")
+    p0, o0 = np.asarray(fleet.pbuf), np.asarray(fleet.obuf)
+    sp, so = fleet.stacked_params, fleet.stacked_opt
+    # dtypes materialize as the originals
+    assert {str(l.dtype) for l in jax.tree.leaves(sp)} >= {"bfloat16"}
+    assert any(str(l.dtype) == "int32" for l in jax.tree.leaves(so))
+    fleet.stacked_params = sp           # re-flatten through the setter
+    fleet.stacked_opt = so
+    np.testing.assert_array_equal(np.asarray(fleet.pbuf), p0)
+    np.testing.assert_array_equal(np.asarray(fleet.obuf), o0)
+    assert fleet.model_bytes == sum(
+        l.size * l.dtype.itemsize for l in jax.tree.leaves(
+            jax.tree.map(lambda l: l[0], sp)))
+
+
+def _mech():
+    return DySTop(V=3.0, t_thre=3, max_neighbors=3)
+
+
+def _run_kw(**kw):
+    base = dict(n_workers=4, n_rounds=6, batch=2, seq=16, eval_every=3,
+                seed=1)
+    base.update(kw)
+    return base
+
+
+_CONTROL_FIELDS = ("rounds", "sim_time", "comm_gb", "staleness_avg",
+                   "staleness_max", "round_durations", "round_active")
+
+
+@pytest.mark.parametrize("optimizer", ["adam", "sgd", "adafactor"])
+def test_resident_matches_reflatten_oracle(optimizer):
+    """The persistent-flat engine == the per-call-flatten oracle: control
+    plane bit-for-bit, params AND optimizer state to f32 tolerance — for
+    every optimizer family (full moments, momentum-only, factored)."""
+    cfg = R.get_smoke_config("smollm-135m")
+    kw = _run_kw(optimizer=optimizer)
+    f_res, h_res = LW.run_lm_federation(
+        _mech(), cfg, LW.LMRunConfig(resident_fleet=True, **kw))
+    f_ora, h_ora = LW.run_lm_federation(
+        _mech(), cfg, LW.LMRunConfig(resident_fleet=False, **kw))
+    for f in _CONTROL_FIELDS:
+        assert getattr(h_res, f) == getattr(h_ora, f), f
+    np.testing.assert_allclose(np.asarray(f_res.pbuf), np.asarray(f_ora.pbuf),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(f_res.obuf), np.asarray(f_ora.obuf),
+                               rtol=1e-4, atol=1e-5)
+    # and the learning curves agree to eval tolerance
+    np.testing.assert_allclose(h_res.loss_global, h_ora.loss_global,
+                               rtol=1e-3)
+
+
+def test_lm_scan_horizon_invariance():
+    """Any scan_horizon yields the same resident trajectory (chunks only
+    change how many rounds ride in one dispatch)."""
+    cfg = R.get_smoke_config("smollm-135m")
+    f1, h1 = LW.run_lm_federation(
+        _mech(), cfg, LW.LMRunConfig(scan_horizon=1, **_run_kw()))
+    f8, h8 = LW.run_lm_federation(
+        _mech(), cfg, LW.LMRunConfig(scan_horizon=8, **_run_kw()))
+    for f in _CONTROL_FIELDS:
+        assert getattr(h1, f) == getattr(h8, f), f
+    np.testing.assert_allclose(np.asarray(f1.pbuf), np.asarray(f8.pbuf),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(f1.obuf), np.asarray(f8.obuf),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_planner_driven_control_matches_hand_rolled_loop():
+    """The driver's control trajectory == an independently hand-rolled
+    ``Mechanism.round`` loop (same rng consumption order: env construction,
+    then per round mechanism draws + dense channel sampling), EXACTLY."""
+    cfg = R.get_smoke_config("smollm-135m")
+    n, rounds, seed = 4, 10, 0
+    run = LW.LMRunConfig(n_workers=n, n_rounds=rounds, batch=2, seq=16,
+                         eval_every=5, seed=seed)
+    fleet, hist = LW.run_lm_federation(_mech(), cfg, run)
+
+    # hand-rolled replay on a fresh, identically-seeded environment
+    rng = np.random.default_rng(seed)
+    net = EdgeNetwork(NetworkConfig(n_workers=n, comm_range_m=80.0), rng)
+    h_i = heterogeneous_compute_times(n, 1.0, rng, sigma=0.6)
+    model_bytes = float(fleet.model_bytes)
+    in_range = net.in_range()
+    exp_link = net.expected_link_time(model_bytes)
+    mech = _mech()
+    st = StalenessState.create(n, 4)
+    pulls = np.zeros((n, n), np.float64)
+    time_since = np.zeros(n, np.float64)
+    clock = 0.0
+    comm = 0.0
+    durations, actives, sim_times = [], [], []
+    for t in range(1, rounds + 1):
+        h_cmp = np.maximum(h_i - time_since, 0.0)
+        est = np.where(in_range, exp_link, 0.0).max(axis=1)
+        ctx = RoundContext(
+            t=t, round_cost=h_cmp + est, readiness=h_i - time_since,
+            in_range=in_range, class_counts=np.ones((n, 2)),
+            phys_dist=net.dist, pull_counts=pulls, staleness=st,
+            bandwidth_budget=np.full(n, 6.0), data_sizes=np.ones(n), rng=rng)
+        dec = mech.round(ctx)
+        raw = model_bytes / net.link_rates()
+        com = np.where(dec.links, np.minimum(raw, 5.0), 0.0).max(axis=1)
+        dur = (float((h_cmp + com)[dec.active].max())
+               if dec.active.any() else 0.0)
+        clock += dur
+        comm += int(dec.links.sum()) * model_bytes
+        pulls += dec.links
+        time_since += dur
+        time_since[dec.active] = 0.0
+        st.advance(dec.active)
+        durations.append(dur)
+        actives.append(int(dec.active.sum()))
+        sim_times.append(clock)
+    assert hist.round_durations == durations
+    assert hist.round_active == actives
+    assert hist.sim_time == [sim_times[4], sim_times[9]]
+    assert hist.comm_gb[-1] == comm / 1e9
