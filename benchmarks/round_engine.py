@@ -92,9 +92,12 @@ def _us_per_round(rounds: int, workers: int, fused: bool,
 
 
 def _steady_env(workers: int, dim: int, hidden: int, max_workers: int,
-                n_plan: int, bucket_cols: bool = True):
+                n_plan: int, bucket_cols: bool = True,
+                mesh_shards: int = 1):
     """Plan a bucket-uniform steady DySTop control run + the flat-buffer
-    model-plane inputs, shared by the mix-plane and dispatch-plane benches."""
+    model-plane inputs, shared by the mix-plane and dispatch-plane benches.
+    ``mesh_shards`` makes the planner resolve shard-aware column unions (the
+    sharded-dispatch bench needs padding candidates inside the union)."""
     rng = np.random.default_rng(0)
     full = make_classification(8000, dim, seed=0)
     data, _ = train_test_split(full, 0.2, seed=0)
@@ -108,7 +111,8 @@ def _steady_env(workers: int, dim: int, hidden: int, max_workers: int,
         exp_link_time=net.expected_link_time(model_bytes),
         model_bytes=model_bytes, class_counts=class_counts,
         data_sizes=data_sizes, net=net, rng=rng, tau_bound=5,
-        bandwidth_budget=8.0, link_timeout_s=5.0, sync_link_timeout_s=30.0)
+        bandwidth_budget=8.0, link_timeout_s=5.0, sync_link_timeout_s=30.0,
+        mesh_shards=mesh_shards)
     plans = planner.plan(n_plan)
     # drop the burn-in, keep a bucket-uniform steady run so the mega path is
     # whole scan chunks (run_simulation splits chunks the same way; with
@@ -287,6 +291,101 @@ def _dispatch_plane(workers: int, horizon: int = 8, n_plan: int = 48,
             jax.block_until_ready(state[name])
             best[name] = min(best[name], (time.time() - t0) / len(plans) * 1e6)
     return best
+
+
+def sharded_main(quick: bool = False, workers: int = 100,
+                 horizon: int = 8) -> None:
+    """Sharded-dispatch row: the SAME steady mega-round trajectory executed
+    on the single-device engine vs the mesh-sharded engine (ISSUE 5).
+
+    Emits only when the backend exposes >= 2 devices — CI's multi-device
+    lane runs it under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    The numbers are PLUMBING PROOF, not a perf claim: emulated host devices
+    time-slice the same cores and pay real collective overhead with none of
+    the memory-capacity or bandwidth win, so sharded us/round is expected to
+    be slower here (docs/BENCHMARKS.md).  The row exists so the sharded
+    dispatch path is exercised end to end and its cost is on record; real
+    speedups are a hardware claim.
+    """
+    import sys
+
+    from repro.sharding.rules import FleetSharding
+
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        print("# round_engine_sharded: skipped — single-device backend "
+              "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+              file=sys.stderr)
+        return
+    shards = min(8, n_dev)
+    n_plan = 24 if quick else 48
+    reps = 4 if quick else 10
+    plans, buf, spec, data_x, data_y, part_idx, part_sizes = _steady_env(
+        workers, 8, 8, 8, n_plan, bucket_cols=True, mesh_shards=shards)
+    plans = plans[: len(plans) // horizon * horizon]
+    assert len(plans) >= horizon, f"steady run too short: {len(plans)}"
+    key = jax.random.PRNGKey(1)
+    kw = dict(spec=spec, lr=0.05, local_steps=1, batch_size=8,
+              col_sparse=True, fused_sgd=True, with_losses=False)
+    shd = FleetSharding.create(shards)
+    row_pad = shd.pad(workers)
+
+    def mk_state(sharded: bool):
+        b = jnp.array(buf)
+        return shd.put_rows_padded(b) if sharded else b
+
+    ops = {
+        False: dict(data_x=data_x, data_y=data_y, part_idx=part_idx,
+                    part_sizes=part_sizes, key=key, put=jnp.asarray,
+                    shd=None),
+        True: dict(data_x=shd.put(data_x), data_y=shd.put(data_y),
+                   part_idx=shd.put_rows(jnp.asarray(np.pad(
+                       np.asarray(part_idx), ((0, row_pad), (0, 0))))),
+                   part_sizes=shd.put_rows(jnp.asarray(np.pad(
+                       np.asarray(part_sizes), (0, row_pad),
+                       constant_values=1))),
+                   key=shd.put(key), put=shd.put, shd=shd),
+    }
+
+    def mega_all(b, sharded: bool):
+        from repro.core.planner import mix_is_train
+
+        o = ops[sharded]
+        for i in range(0, len(plans), horizon):
+            chunk = plans[i:i + horizon]
+            mit = all(mix_is_train(p) for p in chunk)
+            w, c, ts = WK.pack_horizon(chunk, col_sparse=True,
+                                       shards=shards if sharded else 1)
+            b, _ = WK.mega_round_step(
+                b, o["put"](w), o["put"](c), o["put"](ts), o["data_x"],
+                o["data_y"], o["part_idx"], o["part_sizes"], o["key"],
+                mix_is_train=mit, shd=o["shd"], **kw)
+        return b
+    variants = [("single_device", False), (f"sharded{shards}", True)]
+    state = {name: mk_state(sharded) for name, sharded in variants}
+    best = {name: float("inf") for name, _ in variants}
+    for name, sharded in variants:
+        state[name] = mega_all(state[name], sharded)
+        jax.block_until_ready(state[name])          # compile warmup
+    for _ in range(reps):                           # interleaved best-of
+        for name, sharded in variants:
+            t0 = time.time()
+            state[name] = mega_all(state[name], sharded)
+            jax.block_until_ready(state[name])
+            best[name] = min(best[name],
+                             (time.time() - t0) / len(plans) * 1e6)
+    single, shard = best["single_device"], best[f"sharded{shards}"]
+    emit(f"round_engine_sharded/dispatch_scan{horizon}_{workers}w", single,
+         "steady mega-rounds, single-device engine (same box, mesh idle)")
+    emit(f"round_engine_sharded/dispatch_scan{horizon}_sharded{shards}_"
+         f"{workers}w", shard,
+         f"same plans on a {shards}-way fleet mesh (emulated host devices; "
+         f"collective-overhead plumbing proof, not a perf claim)")
+    emit(f"round_engine_sharded/sharded_dispatch_speedup_{workers}w",
+         single / shard,
+         f"sharded/single ratio {single / shard:.2f}x on emulated devices — "
+         f"recorded for plumbing regression only; real speedups are a "
+         f"hardware claim (docs/BENCHMARKS.md)")
 
 
 def main(rounds: int = 80, workers: int = 100) -> None:

@@ -46,6 +46,9 @@ SUITES = {
     "kernels": lambda q: kernels_bench.main(),
     # fused device-resident round engine vs legacy per-leaf path
     "round_engine": lambda q: round_engine.main(rounds=40 if q else 80),
+    # mesh-sharded dispatch plumbing proof (emits only with >= 2 devices;
+    # CI's multi-device lane forces 8 emulated host devices)
+    "round_engine_sharded": lambda q: round_engine.sharded_main(quick=q),
     # persistent-flat planner-driven LM fleet vs per-call-flatten baseline
     "lm_fleet": lambda q: lm_fleet.main(rounds=12 if q else 24),
     # deliverable (g): roofline table from the dry-run artifacts

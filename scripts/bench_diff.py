@@ -1,17 +1,25 @@
 #!/usr/bin/env python
-"""Warn-only diff of fresh benchmark ``--json`` runs against the committed
-``BENCH_*.json`` baselines (see docs/BENCHMARKS.md).
+"""Diff fresh benchmark ``--json`` runs against the committed ``BENCH_*.json``
+baselines (see docs/BENCHMARKS.md).
 
     python scripts/bench_diff.py BENCH_round_engine.json fresh.json \
         [BENCH_lm_fleet.json fresh-lm.json ...] [--warn-pct 30]
 
 Takes one or more ``baseline fresh`` file pairs (any suite that emits the
-harness's ``--json`` schema: round_engine, lm_fleet, ...).  Rows are matched
-by name.  ``*_speedup`` rows (unitless ratios) are compared as absolute
-ratios; ``us_per_call`` rows as relative change (lower is better).  Exits 0
-ALWAYS — shared-runner numbers are noisy, so regressions are surfaced in the
-log, never used to fail the build.  Missing rows (bench renamed/added) are
-listed informationally.
+harness's ``--json`` schema: round_engine, lm_fleet, kernels, ...).  Rows are
+matched by name.  ``*_speedup`` rows (unitless ratios) are compared as
+absolute ratios; ``us_per_call`` rows as relative change (lower is better).
+
+Two failure regimes, deliberately different:
+
+* NUMERIC deltas are WARN-ONLY — shared-runner numbers are noisy, so
+  regressions are surfaced in the log, never used to fail the build.
+* STRUCTURAL regressions FAIL (exit 1) — a fresh file that is missing,
+  unreadable, schema-less, empty, or lacking rows the baseline has means the
+  benchmark plumbing itself rotted (a suite stopped emitting, a row was
+  renamed without updating the baseline), which no amount of runner noise
+  explains.  Rows present only in the fresh run are informational (new
+  benches land before their baseline is regenerated).
 """
 from __future__ import annotations
 
@@ -20,21 +28,39 @@ import json
 import sys
 
 
-def load(path: str) -> dict:
-    with open(path) as f:
-        payload = json.load(f)
-    return {r["name"]: r["us_per_call"] for r in payload.get("results", [])}
+def load(path: str, what: str) -> dict:
+    """Row name -> us_per_call.  Structural problems raise SystemExit(1)."""
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"STRUCTURAL: cannot read {what} {path}: {e}")
+        raise SystemExit(1)
+    rows = payload.get("results")
+    if not isinstance(rows, list) or not rows:
+        print(f"STRUCTURAL: {what} {path} has no 'results' rows "
+              f"(benchmark emitted nothing?)")
+        raise SystemExit(1)
+    try:
+        return {r["name"]: r["us_per_call"] for r in rows}
+    except (TypeError, KeyError) as e:
+        print(f"STRUCTURAL: {what} {path} rows missing name/us_per_call: {e}")
+        raise SystemExit(1)
 
 
-def diff_pair(baseline: str, fresh_path: str, warn_pct: float) -> int:
-    base = load(baseline)
-    fresh = load(fresh_path)
-    warned = 0
+def diff_pair(baseline: str, fresh_path: str,
+              warn_pct: float) -> tuple[int, int]:
+    """Returns (numeric_warnings, structural_failures) for one pair."""
+    base = load(baseline, "baseline")
+    fresh = load(fresh_path, "fresh run")
+    warned = missing = 0
     print(f"== {baseline} vs {fresh_path}")
     print(f"{'row':<44} {'baseline':>10} {'fresh':>10} {'delta':>8}")
     for name in sorted(base):
         if name not in fresh:
-            print(f"{name:<44} {base[name]:>10.1f} {'MISSING':>10}")
+            print(f"{name:<44} {base[name]:>10.1f} {'MISSING':>10}"
+                  f"  << STRUCTURAL")
+            missing += 1
             continue
         b, f = base[name], fresh[name]
         if b <= 0:
@@ -50,7 +76,7 @@ def diff_pair(baseline: str, fresh_path: str, warn_pct: float) -> int:
         print(f"{name:<44} {b:>10.1f} {f:>10.1f} {delta:>+7.1f}%{flag}")
     for name in sorted(set(fresh) - set(base)):
         print(f"{name:<44} {'NEW':>10} {fresh[name]:>10.1f}")
-    return warned
+    return warned, missing
 
 
 def main() -> int:
@@ -63,9 +89,11 @@ def main() -> int:
     if len(args.files) % 2:
         ap.error("files must come in baseline/fresh pairs")
 
-    warned = 0
+    warned = structural = 0
     for baseline, fresh in zip(args.files[::2], args.files[1::2]):
-        warned += diff_pair(baseline, fresh, args.warn_pct)
+        w, s = diff_pair(baseline, fresh, args.warn_pct)
+        warned += w
+        structural += s
         print()
     if warned:
         print(f"{warned} row(s) beyond +/-{args.warn_pct:.0f}% "
@@ -73,7 +101,11 @@ def main() -> int:
               f"it persists across runs)")
     else:
         print("no regressions beyond the warn threshold")
-    return 0                                      # never fail the build
+    if structural:
+        print(f"{structural} baseline row(s) missing from the fresh run — "
+              f"benchmark plumbing regression, failing the build")
+        return 1                                  # structural rot is real
+    return 0                                      # numeric noise never fails
 
 
 if __name__ == "__main__":

@@ -92,18 +92,49 @@ def plan_buckets(active: np.ndarray, links: np.ndarray,
             bucket_size(int(active.sum()), n, min_bucket))
 
 
-def col_union_mask(active: np.ndarray, links: np.ndarray) -> np.ndarray:
+def shard_pad_candidates(mask: np.ndarray, shards: int = 1) -> np.ndarray:
+    """Idle rows eligible as bucket-padding targets, one per mesh shard.
+
+    ``shards == 1`` (the unsharded engine) keeps the historical choice — the
+    globally-first idle row — so padding is bit-identical to the pre-mesh
+    code.  With a sharded ``(N_pad, P)`` buffer the padding gather/scatter is
+    a cross-shard collective whenever the padding row lives off-shard, so the
+    sharded engine instead offers the first idle row of EACH contiguous
+    device block (GSPMD block size ``N_pad // shards``), falling back to the
+    globally-first idle row for blocks with no idle member.  Returns the
+    sorted unique candidate ids (empty iff no row is idle); ``padded_rows``
+    cycles padding slots through them and ``col_union_mask`` admits all of
+    their columns, keeping the two ends of the identity-row-padding contract
+    consistent.
+    """
+    mask = np.asarray(mask, bool)
+    idle = np.flatnonzero(~mask)
+    if len(idle) == 0 or shards <= 1:
+        return idle[:1]
+    n = len(mask)
+    block = (n + (-n) % shards) // shards
+    first = idle[0]
+    homes = idle // block
+    picks = [idle[homes == s][0] if (homes == s).any() else first
+             for s in range(shards)]
+    return np.unique(np.asarray(picks))
+
+
+def col_union_mask(active: np.ndarray, links: np.ndarray,
+                   shards: int = 1) -> np.ndarray:
     """(N,) bool: the union of nonzero mixing-matrix COLUMNS this round.
 
     Row i of W (Eq. 4) is nonzero exactly on {i} ∪ {j : links[i, j]} when i
     mixes (``active[i] | links[i].any()``) and on {i} otherwise.  The union
     over the non-identity rows is therefore ``mix_mask | links.any(0)``
     (sources pulled from need not be mix rows themselves).  Whenever an idle
-    worker exists, the first idle index is ALSO included so that row-bucket
-    padding — which replicates that worker's identity row — stays exact
-    under the column restriction (e_idle restricted to the union must still
-    pick out X[idle]).  Model-value-independent, so the planner can resolve
-    it arbitrarily far ahead of the device.
+    worker exists, the padding-candidate idle indices
+    (``shard_pad_candidates`` — the first idle row, or one per mesh shard
+    when ``shards > 1``) are ALSO included so that row-bucket padding — which
+    replicates those workers' identity rows — stays exact under the column
+    restriction (e_idle restricted to the union must still pick out
+    X[idle]).  Model-value-independent, so the planner can resolve it
+    arbitrarily far ahead of the device.
     """
     active = np.asarray(active, bool)
     links = np.asarray(links, bool)
@@ -111,7 +142,7 @@ def col_union_mask(active: np.ndarray, links: np.ndarray) -> np.ndarray:
     cols = mix_mask | links.any(axis=0)
     if mix_mask.any() and not mix_mask.all():
         cols = cols.copy()
-        cols[np.flatnonzero(~mix_mask)[0]] = True   # row-padding identity col
+        cols[shard_pad_candidates(mix_mask, shards)] = True
     return cols
 
 
@@ -163,7 +194,8 @@ def prefer_cols(k: int, u: int, n: int,
 
 
 def padded_rows(mask: np.ndarray, min_bucket: int = 8,
-                pad_to: int | None = None) -> Tuple[np.ndarray, np.ndarray]:
+                pad_to: int | None = None,
+                shards: int = 1) -> Tuple[np.ndarray, np.ndarray]:
     """Indices of the k True rows, padded to a power-of-two shape bucket.
 
     Returns ``(row_ids (k_pad,) i32, valid (k_pad,) bool)``.  Padding repeats
@@ -176,6 +208,15 @@ def padded_rows(mask: np.ndarray, min_bucket: int = 8,
     ``pad_to`` overrides the bucket (horizon packing: every round of a
     ``lax.scan`` chunk must share one shape); it must be a bucket ≥ k, and a
     k = 0 round pads with index-0 no-op rows (all-idle ⇒ row 0 is idle).
+
+    ``shards > 1`` (mesh-sharded buffer): padding slots cycle through one
+    idle row per device block (``shard_pad_candidates``) and the id vector is
+    returned SORTED, so gathered rows are grouped by home shard and the
+    padded scatter-backs stay shard-local.  Row order is value-irrelevant —
+    batch streams are keyed by worker id, not gather position, and scatters
+    address rows by id — so ``shards`` never perturbs trajectories; with
+    ``shards == 1`` the historical layout (first idle repeated, appended
+    last) is preserved bit-for-bit.
     """
     mask = np.asarray(mask, bool)
     n = len(mask)
@@ -185,23 +226,28 @@ def padded_rows(mask: np.ndarray, min_bucket: int = 8,
     if k_pad == 0:
         return np.zeros((0,), np.int32), np.zeros((0,), bool)
     if k_pad > k:
-        idle = np.flatnonzero(~mask)[0]
-        rows = np.concatenate([rows, np.full(k_pad - k, idle, rows.dtype)])
+        cand = shard_pad_candidates(mask, shards)
+        rows = np.concatenate(
+            [rows, cand[np.arange(k_pad - k) % len(cand)]]).astype(rows.dtype)
+        if shards > 1:
+            rows = np.sort(rows)      # group by home shard (contiguous blocks)
     return rows.astype(np.int32), mask[rows]
 
 
 def mixing_rows(W: np.ndarray, active: np.ndarray, links: np.ndarray,
-                min_bucket: int = 8, pad_to: int | None = None
-                ) -> Tuple[np.ndarray, np.ndarray]:
+                min_bucket: int = 8, pad_to: int | None = None,
+                shards: int = 1) -> Tuple[np.ndarray, np.ndarray]:
     """Gather the non-identity rows of W for the sparse aggregation path.
 
     Returns ``(W_rows (k_pad, N) f32, row_ids (k_pad,) i32)`` bucketed by
-    ``padded_rows``; padding entries replicate an identity row of W targeting
-    an idle worker, so the scatter-back is a no-op there.
+    ``padded_rows`` (``shards`` selects its shard-local padding layout);
+    padding entries replicate an identity row of W targeting an idle worker,
+    so the scatter-back is a no-op there.
     """
     active = np.asarray(active, bool)
     links = np.asarray(links, bool)
-    row_ids, _ = padded_rows(active | links.any(axis=1), min_bucket, pad_to)
+    row_ids, _ = padded_rows(active | links.any(axis=1), min_bucket, pad_to,
+                             shards)
     return (np.ascontiguousarray(W[row_ids], np.float32) if len(row_ids)
             else np.zeros((0, len(active)), np.float32)), row_ids
 
@@ -209,7 +255,8 @@ def mixing_rows(W: np.ndarray, active: np.ndarray, links: np.ndarray,
 def mixing_rows_cols(W: np.ndarray, active: np.ndarray, links: np.ndarray,
                      min_bucket: int = 8, pad_to: int | None = None,
                      col_pad_to: int | None = None,
-                     cols_mask: np.ndarray | None = None
+                     cols_mask: np.ndarray | None = None,
+                     shards: int = 1
                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Gather the non-identity rows of W restricted to their column union.
 
@@ -222,19 +269,22 @@ def mixing_rows_cols(W: np.ndarray, active: np.ndarray, links: np.ndarray,
     index 0 but the matching W_sub columns are ZEROED, so padded columns
     contribute exactly 0 to the contraction; row padding replicates an idle
     worker's identity row exactly as in ``mixing_rows`` (its column is a
-    member of the union by construction).  When the union bucket reaches N
-    the gather degenerates to ``col_ids = arange(N)`` — the row-sparse
-    contraction with an extra no-op gather.
+    member of the union by construction — with ``shards > 1`` the union and
+    the padding layout must be resolved with the SAME shard count, so the
+    per-shard padding candidates' columns are all members).  When the union
+    bucket reaches N the gather degenerates to ``col_ids = arange(N)`` — the
+    row-sparse contraction with an extra no-op gather.
     """
     active = np.asarray(active, bool)
     links = np.asarray(links, bool)
     n = len(active)
-    row_ids, _ = padded_rows(active | links.any(axis=1), min_bucket, pad_to)
+    row_ids, _ = padded_rows(active | links.any(axis=1), min_bucket, pad_to,
+                             shards)
     if len(row_ids) == 0:
         return (np.zeros((0, 0), np.float32), row_ids,
                 np.zeros((0,), np.int32))
     if cols_mask is None:
-        cols_mask = col_union_mask(active, links)
+        cols_mask = col_union_mask(active, links, shards)
     cols = np.flatnonzero(cols_mask)
     u = len(cols)
     u_pad = bucket_size(u, n, min_bucket) if col_pad_to is None \

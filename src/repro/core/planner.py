@@ -53,7 +53,7 @@ class PlannedRound:
 
 def bucket_key(plan: "PlannedRound", n_workers: int,
                col_sparse: bool = False,
-               min_bucket: int = 8) -> Tuple[int, ...]:
+               min_bucket: int = 8, mesh_shards: int = 1) -> Tuple[int, ...]:
     """Power-of-two shape buckets of one planned round.
 
     ``(k_mix, k_train)`` — plus the bucket of the nonzero-column union when
@@ -62,13 +62,37 @@ def bucket_key(plan: "PlannedRound", n_workers: int,
     chunk must share one contraction shape.  Model-value-independent, so it
     lives with the planner and serves BOTH planes (the MLP simulation engine
     and the LM fleet engine) rather than being re-derived per worker module.
+    ``mesh_shards`` only feeds the ``col_union_mask`` fallback for plans
+    whose union the planner did not resolve (a sharded planner stores the
+    shard-aware union in ``mix_cols`` already).
     """
     base = plan_buckets(plan.active, plan.links, min_bucket)
     if not col_sparse:
         return base
     cols = (plan.mix_cols if plan.mix_cols is not None
-            else col_union_mask(plan.active, plan.links))
+            else col_union_mask(plan.active, plan.links, mesh_shards))
     return base + (bucket_size(int(cols.sum()), n_workers, min_bucket),)
+
+
+def shard_spans(row_ids: np.ndarray, n_workers: int,
+                mesh_shards: int) -> List[Tuple[int, int]]:
+    """Per-shard ``[lo, hi)`` segments of a home-shard-grouped gathered id
+    vector (``aggregation.padded_rows(shards=...)`` layout).
+
+    The sharded buffer partitions its padded row axis into contiguous device
+    blocks of ``N_pad // mesh_shards`` rows, so a sorted id vector is grouped
+    by home shard and each shard's gather/scatter touches one contiguous
+    segment of the gathered set — the locality invariant the shard-aware
+    chunking maintains (asserted by the sharded-engine tests, and the shape
+    a future shard_map lowering would consume directly).
+    """
+    ids = np.asarray(row_ids)
+    n_pad = n_workers + (-n_workers) % mesh_shards
+    block = n_pad // mesh_shards
+    homes = ids // block
+    assert (np.diff(homes) >= 0).all(), "row ids not grouped by home shard"
+    bounds = np.searchsorted(homes, np.arange(mesh_shards + 1))
+    return [(int(bounds[s]), int(bounds[s + 1])) for s in range(mesh_shards)]
 
 
 def mix_is_train(plan: "PlannedRound") -> bool:
@@ -83,7 +107,8 @@ def mix_is_train(plan: "PlannedRound") -> bool:
 
 
 def chunk_spans(plans: List["PlannedRound"], n_workers: int,
-                col_sparse: bool = False, min_bucket: int = 8
+                col_sparse: bool = False, min_bucket: int = 8,
+                mesh_shards: int = 1
                 ) -> Iterator[Tuple[int, int, Tuple[int, ...]]]:
     """Split a pending plan list into maximal bucket-uniform ``[lo, hi)``
     runs — the chunks a model plane ships as single ``lax.scan``
@@ -96,11 +121,12 @@ def chunk_spans(plans: List["PlannedRound"], n_workers: int,
     """
     lo = 0
     while lo < len(plans):
-        key = bucket_key(plans[lo], n_workers, col_sparse, min_bucket)
+        key = bucket_key(plans[lo], n_workers, col_sparse, min_bucket,
+                         mesh_shards)
         hi = lo + 1
         while (hi < len(plans)
                and bucket_key(plans[hi], n_workers, col_sparse,
-                              min_bucket) == key):
+                              min_bucket, mesh_shards) == key):
             hi += 1
         yield lo, hi, key
         lo = hi
@@ -121,7 +147,8 @@ class HorizonPlanner:
                  data_sizes: np.ndarray, net, rng: np.random.Generator,
                  tau_bound: int, bandwidth_budget: float,
                  link_timeout_s: float, sync_link_timeout_s: float,
-                 failure_prob: float = 0.0, failure_persist: float = 0.5):
+                 failure_prob: float = 0.0, failure_persist: float = 0.5,
+                 mesh_shards: int = 1):
         n = len(h_i)
         self.mechanism = mechanism
         self.n_workers = n
@@ -137,6 +164,12 @@ class HorizonPlanner:
         self.sync_link_timeout_s = sync_link_timeout_s
         self.failure_prob = failure_prob
         self.failure_persist = failure_persist
+        # shard-aware chunking: with a mesh-sharded model plane the planner
+        # resolves mixing-column unions (and therefore bucket keys) against
+        # the shard layout, so padding rows stay shard-local at dispatch time;
+        # mesh_shards=1 reproduces the unsharded plans bit-for-bit.  Purely a
+        # dispatch-shape concern — the control rng stream never sees it.
+        self.mesh_shards = mesh_shards
         # mutable control state
         self.st = StalenessState.create(n, tau_bound)
         self.pull_counts = np.zeros((n, n), np.float64)
@@ -214,7 +247,8 @@ class HorizonPlanner:
         return PlannedRound(t=t, active=dec.active, links=dec.links,
                             synchronous=dec.synchronous, W=W,
                             duration=duration, n_transfers=n_transfers,
-                            mix_cols=col_union_mask(dec.active, dec.links))
+                            mix_cols=col_union_mask(dec.active, dec.links,
+                                                    self.mesh_shards))
 
     def plan(self, horizon: int,
              max_round: Optional[int] = None) -> List[PlannedRound]:

@@ -267,14 +267,15 @@ _ENGINE_CACHE: Dict[tuple, "LMEngine"] = {}
 
 
 def get_lm_engine(cfg: ModelConfig, optimizer: Optimizer,
-                  spec: FS.FleetSpec, use_kernel: bool = False) -> "LMEngine":
-    """One ``LMEngine`` per (cfg, optimizer, spec, use_kernel): the engine
-    owns the jitted scan variants, so sharing it across runs keeps repeated
-    federations (benchmark reps, test A/Bs) compile-warm."""
-    key = (cfg, optimizer, spec, use_kernel)
+                  spec: FS.FleetSpec, use_kernel: bool = False,
+                  shd=None) -> "LMEngine":
+    """One ``LMEngine`` per (cfg, optimizer, spec, use_kernel, shd): the
+    engine owns the jitted scan variants, so sharing it across runs keeps
+    repeated federations (benchmark reps, test A/Bs) compile-warm."""
+    key = (cfg, optimizer, spec, use_kernel, shd)
     if key not in _ENGINE_CACHE:
         _ENGINE_CACHE[key] = LMEngine(cfg, optimizer, spec,
-                                      use_kernel=use_kernel)
+                                      use_kernel=use_kernel, shd=shd)
     return _ENGINE_CACHE[key]
 
 
@@ -291,19 +292,40 @@ class LMEngine:
     fusion (mix rows == train rows, every DySTop round) the mixed sub-buffer
     feeds the train step directly, skipping the intermediate scatter.
 
-    Jits are cached per (col_sparse, fuse) variant; shapes bucket through
-    ``pack_horizon``, so the compile count stays O(log N) per variant.
+    Jits are cached per (col_sparse, fuse, pregather) variant; shapes bucket
+    through ``pack_horizon``, so the compile count stays O(log N) per
+    variant.
+
+    ``shd`` (a ``sharding.rules.FleetSharding``) runs the engine mesh-
+    sharded: ``pbuf``/``obuf`` stay row-partitioned over the fleet axis
+    across dispatches, the mix lowers to the collective contractions of
+    ``kernels.aggregate`` (union all_gather / shard-local slabs + psum), and
+    the gathered-row train step splits its k workers over the shards
+    whenever k divides evenly.
+
+    ``pregather=True`` in ``dispatch_chunk`` gathers the k activated batch
+    rows on HOST before the H2D transfer — batches ship (H, k, B, S) instead
+    of (H, N, B, S), an ~N/k transfer cut that matters precisely in the
+    large-N sharded regime (the train ids still ride in ``ctrl`` for the
+    scatter; gather by padded ids is value-exact, padding rows are masked
+    no-ops).
     """
 
     def __init__(self, cfg: ModelConfig, optimizer: Optimizer,
-                 spec: FS.FleetSpec, use_kernel: bool = False):
+                 spec: FS.FleetSpec, use_kernel: bool = False, shd=None):
         self.cfg, self.opt, self.spec = cfg, optimizer, spec
         self.use_kernel = use_kernel
+        self.shd = shd
         self._mega_cache: dict = {}
 
     # -- gathered-active-row train: vmap over the k activated workers only --
     def _train_rows(self, psub, osub, mask, tok, lab):
         cfg, opt, spec = self.cfg, self.opt, self.spec
+        if self.shd is not None:
+            sub_shd = self.shd.for_rows(psub.shape[0])
+            psub, osub, tok, lab = (
+                jax.lax.with_sharding_constraint(x, sub_shd)
+                for x in (psub, osub, tok, lab))
 
         def one(pvec, ovec, m, t, l):
             params = FS.unravel_row(pvec, spec.params)
@@ -322,32 +344,47 @@ class LMEngine:
         return jax.vmap(one)(psub, osub, mask, tok, lab)
 
     def _round_body(self, pbuf, obuf, w, mids, cids, tids, mask, tok, lab,
-                    fuse: bool):
+                    fuse: bool, pregather: bool):
         n = pbuf.shape[0]
+        shd = self.shd
+
+        def pin(pb, ob, ls):
+            if shd is None:
+                return pb, ob, ls
+            return (jax.lax.with_sharding_constraint(pb, shd.rows()),
+                    jax.lax.with_sharding_constraint(ob, shd.rows()),
+                    jax.lax.with_sharding_constraint(ls, shd.replicated()))
+
         k_mix, k_train = w.shape[0], tids.shape[0]
         losses = jnp.zeros((n,), jnp.float32)
+        # pregathered batches arrive (k, B, S) in train-row order; otherwise
+        # the activated rows are gathered from the full-N batch on device
+        tok_k = tok if pregather else (tok[tids] if k_train else tok)
+        lab_k = lab if pregather else (lab[tids] if k_train else lab)
         if fuse and k_mix and k_train:
             # mix rows == train rows: Eq. 4 output feeds Eq. 5 directly
-            sub = WK._mix_rows(pbuf, w, cids, self.use_kernel)
+            sub = WK._mix_rows(pbuf, w, cids, self.use_kernel, shd)
             new_p, new_o, sl = self._train_rows(sub, obuf[tids], mask,
-                                                tok[tids], lab[tids])
-            return (pbuf.at[tids].set(new_p), obuf.at[tids].set(new_o),
-                    losses.at[tids].set(sl))
+                                                tok_k, lab_k)
+            return pin(pbuf.at[tids].set(new_p), obuf.at[tids].set(new_o),
+                       losses.at[tids].set(sl))
         if k_mix:
-            pbuf = (WK.mix_flat_cols(pbuf, w, mids, cids, self.use_kernel)
+            pbuf = (WK.mix_flat_cols(pbuf, w, mids, cids, self.use_kernel,
+                                     shd=shd)
                     if cids is not None
-                    else WK.mix_flat(pbuf, w, mids, self.use_kernel))
+                    else WK.mix_flat(pbuf, w, mids, self.use_kernel, shd=shd))
         if k_train:
             new_p, new_o, sl = self._train_rows(pbuf[tids], obuf[tids], mask,
-                                                tok[tids], lab[tids])
+                                                tok_k, lab_k)
             pbuf = pbuf.at[tids].set(new_p)
             obuf = obuf.at[tids].set(new_o)
             losses = losses.at[tids].set(sl)
-        return pbuf, obuf, losses
+        return pin(pbuf, obuf, losses)
 
-    def _mega(self, col_sparse: bool, fuse: bool):
-        if (col_sparse, fuse) in self._mega_cache:
-            return self._mega_cache[(col_sparse, fuse)]
+    def _mega(self, col_sparse: bool, fuse: bool, pregather: bool):
+        key = (col_sparse, fuse, pregather)
+        if key in self._mega_cache:
+            return self._mega_cache[key]
 
         @functools.partial(jax.jit, donate_argnums=(0, 1))
         def mega(pbuf, obuf, w_rows, ctrl, tokens, labels):
@@ -358,7 +395,7 @@ class LMEngine:
                 def body(c, xs):
                     w, mi, ci, ti, m, tk, lb = xs
                     pb, ob, ls = self._round_body(c[0], c[1], w, mi, ci, ti,
-                                                  m, tk, lb, fuse)
+                                                  m, tk, lb, fuse, pregather)
                     return (pb, ob), ls
                 xs = (w_rows, mix_ids, col_ids, train_ids, masks,
                       tokens, labels)
@@ -366,32 +403,49 @@ class LMEngine:
                 def body(c, xs):
                     w, mi, ti, m, tk, lb = xs
                     pb, ob, ls = self._round_body(c[0], c[1], w, mi, None,
-                                                  ti, m, tk, lb, fuse)
+                                                  ti, m, tk, lb, fuse,
+                                                  pregather)
                     return (pb, ob), ls
                 xs = (w_rows, mix_ids, train_ids, masks, tokens, labels)
             (pbuf, obuf), losses = jax.lax.scan(body, (pbuf, obuf), xs)
             return pbuf, obuf, losses
 
-        self._mega_cache[(col_sparse, fuse)] = mega
+        self._mega_cache[key] = mega
         return mega
 
     def dispatch_chunk(self, pbuf, obuf, chunk: List[PlannedRound],
                        tokens: np.ndarray, labels: np.ndarray, *,
-                       col_sparse: bool, fuse: bool, min_bucket: int = 8
+                       col_sparse: bool, fuse: bool, min_bucket: int = 8,
+                       pregather: bool = False
                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
         """One bucket-uniform chunk -> one donated scan dispatch.
 
-        ``tokens``/``labels`` are the full-N per-round batches (H, N, B, S);
-        the activated rows are gathered ON DEVICE by the packed train ids,
-        so the host never re-shapes batches per activation pattern.
+        ``tokens``/``labels`` are the full-N per-round batches (H, N, B, S).
+        ``pregather=False``: they ship whole and the activated rows are
+        gathered ON DEVICE by the packed train ids.  ``pregather=True``: the
+        k activated rows are gathered on HOST (by the padded train-id
+        segments already packed into ``ctrl``) and only (H, k, B, S) crosses
+        the H2D boundary — identical values, ~N/k less batch transfer.
         Returns (new pbuf, new obuf, (H, N) per-round losses — zero rows for
         idle workers).
         """
+        shards = self.shd.n_shards if self.shd is not None else 1
         w, c, _ = WK.pack_horizon(chunk, min_bucket=min_bucket,
-                                  col_sparse=col_sparse)
-        return self._mega(col_sparse, fuse)(
-            pbuf, obuf, jnp.asarray(w), jnp.asarray(c),
-            jnp.asarray(tokens), jnp.asarray(labels))
+                                  col_sparse=col_sparse, shards=shards)
+        if self.shd is not None and not (col_sparse and w.shape[1]):
+            w = WK.pad_w_cols(w, pbuf.shape[0])
+        k_mix = w.shape[1]
+        u = w.shape[2] if col_sparse and k_mix else 0
+        # one ctrl-layout definition: the same split the device scan performs
+        _, _, tids, _ = WK.split_ctrl(c, k_mix, u)
+        k_train = tids.shape[-1]
+        if pregather and k_train:
+            h_ix = np.arange(len(chunk))[:, None]
+            tokens = tokens[h_ix, tids]                      # (H, k, B, S)
+            labels = labels[h_ix, tids]
+        put = self.shd.put if self.shd is not None else jnp.asarray
+        return self._mega(col_sparse, fuse, pregather and bool(k_train))(
+            pbuf, obuf, put(w), put(c), put(tokens), put(labels))
 
     @functools.cached_property
     def eval_global(self):
@@ -426,6 +480,14 @@ class LMRunConfig:
     f32 tolerance (pinned by ``tests/test_lm_fleet.py``).  ``min_bucket=2``:
     LM fleets are small (8-64 workers), so fine-grained shape buckets keep
     the gathered row set near the true activation count.
+
+    ``mesh_shards > 1`` (resident engine only) row-partitions ``pbuf`` /
+    ``obuf`` over the 1-D fleet mesh — N pads to a shard multiple with
+    permanently-idle rows, control trajectories stay bit-identical, model
+    state agrees to f32 reduction-order tolerance.  ``host_batch_gather``
+    gathers the k activated batch rows on host before H2D (value-exact;
+    (H, k, B, S) ships instead of (H, N, B, S) — the ~N/k transfer cut that
+    matters in the large-N sharded regime).
     """
     n_workers: int = 8
     n_rounds: int = 30
@@ -436,6 +498,8 @@ class LMRunConfig:
     scan_horizon: int = 8
     resident_fleet: bool = True
     col_sparse_mix: bool = True
+    mesh_shards: int = 1
+    host_batch_gather: bool = True
     min_bucket: int = 2
     eval_every: int = 5
     seed: int = 0
@@ -483,9 +547,22 @@ def run_lm_federation(mechanism, cfg: ModelConfig, run: LMRunConfig
     """
     t_wall = time.time()
     n = run.n_workers
+    shd = None
+    if run.mesh_shards > 1:
+        if not run.resident_fleet:
+            raise ValueError("mesh_shards > 1 requires the resident engine "
+                             "(resident_fleet=True)")
+        if run.use_kernel:
+            raise ValueError("mesh_shards > 1 requires use_kernel=False "
+                             "(Pallas is not GSPMD-auto-partitionable)")
+        from repro.sharding.rules import FleetSharding
+        shd = FleetSharding.create(run.mesh_shards)
     rng = np.random.default_rng(run.seed)
     fleet = init_fleet(cfg, n, optimizer=run.optimizer, lr=run.lr,
                        seed=run.seed)
+    if shd is not None:
+        fleet.pbuf = shd.put_rows_padded(fleet.pbuf)
+        fleet.obuf = shd.put_rows_padded(fleet.obuf)
     streams = worker_streams(cfg, n, run.batch, run.seq, seed=run.seed)
     ev = next(worker_streams(cfg, 1, run.batch, run.seq, seed=run.seed + 1))
     eval_tok = jnp.asarray(ev["tokens"][0])
@@ -501,13 +578,17 @@ def run_lm_federation(mechanism, cfg: ModelConfig, run: LMRunConfig
         data_sizes=np.ones(n), net=net, rng=rng, tau_bound=run.tau_bound,
         bandwidth_budget=run.bandwidth_budget,
         link_timeout_s=run.link_timeout_s,
-        sync_link_timeout_s=run.sync_link_timeout_s)
+        sync_link_timeout_s=run.sync_link_timeout_s,
+        mesh_shards=run.mesh_shards)
     alpha = jnp.full((n,), 1.0 / n, jnp.float32)
+    # Eq. 11 weights over the PADDED row axis: padding rows weigh zero
+    alpha_eval = alpha if shd is None else shd.put(
+        jnp.concatenate([alpha, jnp.zeros((shd.pad(n),), jnp.float32)]))
     hist = LMHistory()
 
     if run.resident_fleet:
         engine = get_lm_engine(cfg, fleet.optimizer, fleet.spec,
-                               use_kernel=run.use_kernel)
+                               use_kernel=run.use_kernel, shd=shd)
         horizon = max(1, run.scan_horizon)
         sp = so = step = None
     else:
@@ -526,7 +607,8 @@ def run_lm_federation(mechanism, cfg: ModelConfig, run: LMRunConfig
         if run.resident_fleet:
             for lo, hi, key in chunk_spans(plans, n,
                                            col_sparse=run.col_sparse_mix,
-                                           min_bucket=run.min_bucket):
+                                           min_bucket=run.min_bucket,
+                                           mesh_shards=run.mesh_shards):
                 chunk = plans[lo:hi]
                 col = run.col_sparse_mix and prefer_cols(key[0], key[2], n)
                 fuse = all(mix_is_train(p) for p in chunk)
@@ -534,7 +616,8 @@ def run_lm_federation(mechanism, cfg: ModelConfig, run: LMRunConfig
                 labels = np.stack([b["labels"] for _, b in pending[lo:hi]])
                 fleet.pbuf, fleet.obuf, losses = engine.dispatch_chunk(
                     fleet.pbuf, fleet.obuf, chunk, tokens, labels,
-                    col_sparse=col, fuse=fuse, min_bucket=run.min_bucket)
+                    col_sparse=col, fuse=fuse, min_bucket=run.min_bucket,
+                    pregather=run.host_batch_gather)
                 for j, p in enumerate(chunk):
                     loss_rows.append((losses[j], p.active))
         else:
@@ -550,7 +633,7 @@ def run_lm_federation(mechanism, cfg: ModelConfig, run: LMRunConfig
         """Materialize queued per-round losses (device sync happens at eval
         boundaries only, so round dispatches stay queued in between)."""
         for losses, active in loss_rows:
-            row = np.asarray(losses)
+            row = np.asarray(losses)[:len(active)]     # drop shard padding
             hist.round_loss.append(float(row[active].mean())
                                    if active.any() else 0.0)
         loss_rows.clear()
@@ -570,7 +653,7 @@ def run_lm_federation(mechanism, cfg: ModelConfig, run: LMRunConfig
             t_ev = time.time()
             drain_losses()
             if run.resident_fleet:
-                lg = float(engine.eval_global(fleet.pbuf, alpha,
+                lg = float(engine.eval_global(fleet.pbuf, alpha_eval,
                                               eval_tok, eval_lab))
             else:
                 lg = fleet_eval_stacked(
@@ -591,5 +674,8 @@ def run_lm_federation(mechanism, cfg: ModelConfig, run: LMRunConfig
     if not run.resident_fleet:
         fleet.stacked_params = sp         # write the oracle state back once
         fleet.stacked_opt = so
+    if shd is not None and fleet.pbuf.shape[0] != n:
+        fleet.pbuf = fleet.pbuf[:n]       # shed the shard padding: callers
+        fleet.obuf = fleet.obuf[:n]       #   see the (N, ·) contract
     hist.wall_s = time.time() - t_wall
     return fleet, hist

@@ -114,6 +114,22 @@ class SimConfig:
                                       #   f32 rounding differs.  Auto-falls
                                       #   back to the AD path for non-MLP
                                       #   specs
+    mesh_shards: int = 1              # fused engine: partition the resident
+                                      #   (N, P) buffer + dataset row-wise
+                                      #   over a 1-D device mesh
+                                      #   (launch.mesh.make_fleet_mesh); the
+                                      #   worker axis pads to a shard
+                                      #   multiple with permanently-idle
+                                      #   rows.  1 = single-device engine
+                                      #   (the bit-exact oracle); >1 needs
+                                      #   that many jax devices (CPU: set
+                                      #   XLA_FLAGS=--xla_force_host_
+                                      #   platform_device_count=K) and the
+                                      #   jnp mix lowering (use_kernel off).
+                                      #   Control-plane trajectories are
+                                      #   bit-identical at any shard count;
+                                      #   learning curves agree to f32
+                                      #   reduction-order tolerance
     n_samples: int = 20000
     dim: int = 32
 
@@ -191,6 +207,20 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
     # (numpy on host) — histories stay comparable metric-for-metric
     batch_rng = np.random.default_rng(cfg.seed + 0x5EED)
     batch_key = jax.random.PRNGKey(cfg.seed + 0x5EED)
+    shd = None
+    if cfg.mesh_shards > 1:
+        if not cfg.fused_engine:
+            raise ValueError(
+                "mesh_shards > 1 requires the fused engine "
+                "(fused_engine=True): the legacy per-leaf path has no "
+                "resident buffer to shard")
+        if cfg.use_kernel:
+            raise ValueError(
+                "mesh_shards > 1 requires use_kernel=False: the Pallas "
+                "aggregate path cannot be GSPMD-auto-partitioned (a per-"
+                "shard shard_map lowering is the TPU follow-up)")
+        from repro.sharding.rules import FleetSharding
+        shd = FleetSharding.create(cfg.mesh_shards)
     if cfg.fused_engine:
         buf, flat_spec = FS.flatten_stacked(stacked)
         stacked = None                     # the flat buffer IS the storage
@@ -200,8 +230,27 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
         part_idx = np.zeros((cfg.n_workers, max_part), np.int32)
         for i, p in enumerate(parts):
             part_idx[i, :len(p)] = p       # padding never sampled (uniform
-        part_idx = jnp.asarray(part_idx)   #   draws are < the true size)
-        part_sizes = jnp.asarray(data_sizes.astype(np.int32))
+        part_sizes = data_sizes.astype(np.int32)  # draws < the true size
+        if shd is not None:
+            # pad the worker axis to a shard multiple (jax NamedShardings
+            # need even splits); padding rows are permanently idle — never
+            # activated, mixed, or evaluated — so zeros are fine.  The
+            # resident dataset partitions row-wise across the mesh too
+            # (sample padding is never indexed: part_idx holds real ids only)
+            row_pad = shd.pad(cfg.n_workers)
+            if row_pad:
+                part_idx = np.pad(part_idx, ((0, row_pad), (0, 0)))
+                part_sizes = np.pad(part_sizes, (0, row_pad),
+                                    constant_values=1)
+            buf = shd.put_rows_padded(buf)
+            data_x = shd.put_rows_padded(data_x)
+            data_y = shd.put_rows_padded(data_y)
+            part_idx = shd.put_rows(jnp.asarray(part_idx))
+            part_sizes = shd.put_rows(jnp.asarray(part_sizes))
+            batch_key = shd.put(batch_key)
+        else:
+            part_idx = jnp.asarray(part_idx)
+            part_sizes = jnp.asarray(part_sizes)
 
     # --- control plane: the horizon planner owns all mutable control state
     # (staleness, pull counts, readiness clocks, failure mask, sim clock) and
@@ -214,7 +263,8 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
         bandwidth_budget=cfg.bandwidth_budget,
         link_timeout_s=cfg.link_timeout_s,
         sync_link_timeout_s=cfg.sync_link_timeout_s,
-        failure_prob=cfg.failure_prob, failure_persist=cfg.failure_persist)
+        failure_prob=cfg.failure_prob, failure_persist=cfg.failure_persist,
+        mesh_shards=cfg.mesh_shards)
     x_test = jnp.asarray(test.x)
     y_test = jnp.asarray(test.y)
 
@@ -247,16 +297,21 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
         """
         nonlocal buf, stacked
         if cfg.fused_engine:
+            put = shd.put if shd is not None else jnp.asarray
+            n_rows = cfg.n_workers + (shd.pad(cfg.n_workers) if shd else 0)
             for lo, hi, key in chunk_spans(plans, cfg.n_workers,
-                                           col_sparse=cfg.col_sparse_mix):
+                                           col_sparse=cfg.col_sparse_mix,
+                                           mesh_shards=cfg.mesh_shards):
                 chunk = plans[lo:hi]
                 col = use_cols(key)
                 if len(chunk) > 1:
                     w_rows_h, ctrl_h, ts = WK.pack_horizon(
-                        chunk, col_sparse=col)
+                        chunk, col_sparse=col, shards=cfg.mesh_shards)
+                    if not col:
+                        w_rows_h = WK.pad_w_cols(w_rows_h, n_rows)
                     buf, _ = WK.mega_round_step(
-                        buf, jnp.asarray(w_rows_h), jnp.asarray(ctrl_h),
-                        jnp.asarray(ts), data_x, data_y, part_idx,
+                        buf, put(w_rows_h), put(ctrl_h),
+                        put(ts), data_x, data_y, part_idx,
                         part_sizes, batch_key, spec=flat_spec, lr=cfg.lr,
                         local_steps=cfg.local_steps,
                         batch_size=cfg.batch_size, use_kernel=cfg.use_kernel,
@@ -264,7 +319,8 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
                         with_losses=False,
                         mix_is_train=(fused_sgd
                                       and all(mix_is_train(p)
-                                              for p in chunk)))
+                                              for p in chunk)),
+                        shd=shd)
                     continue
                 # single-round path: one donated round_step dispatch; with
                 # col_sparse_mix/fused_local_sgd off this is bit-for-bit the
@@ -272,21 +328,25 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
                 p = chunk[0]
                 if col:
                     w_rows, mix_ids, col_ids = mixing_rows_cols(
-                        p.W, p.active, p.links, cols_mask=p.mix_cols)
+                        p.W, p.active, p.links, cols_mask=p.mix_cols,
+                        shards=cfg.mesh_shards)
                 else:
-                    w_rows, mix_ids = mixing_rows(p.W, p.active, p.links)
+                    w_rows, mix_ids = mixing_rows(p.W, p.active, p.links,
+                                                  shards=cfg.mesh_shards)
+                    w_rows = WK.pad_w_cols(w_rows, n_rows)
                     col_ids = None
-                train_ids, train_mask = padded_rows(p.active)
+                train_ids, train_mask = padded_rows(p.active,
+                                                    shards=cfg.mesh_shards)
                 ctrl = WK.pack_round_ctrl(mix_ids, train_ids, train_mask,
                                           col_ids=col_ids)
                 buf, _ = WK.round_step(
-                    buf, jnp.asarray(w_rows), jnp.asarray(ctrl),
+                    buf, put(w_rows), put(ctrl),
                     data_x, data_y, part_idx, part_sizes, batch_key,
                     np.int32(p.t), spec=flat_spec, lr=cfg.lr,
                     local_steps=cfg.local_steps, batch_size=cfg.batch_size,
                     use_kernel=cfg.use_kernel,
                     col_sparse=col, fused_sgd=fused_sgd, with_losses=False,
-                    mix_is_train=fused_sgd and mix_is_train(p))
+                    mix_is_train=fused_sgd and mix_is_train(p), shd=shd)
         else:
             for p in plans:
                 stacked = apply_mixing(jnp.asarray(p.W), stacked,
@@ -334,10 +394,14 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
             t_eval = time.time()
             if cfg.fused_engine:
                 # flat-native eval: Eq. 11 global model is one alpha @ buf
-                # matvec; no stacked pytree is materialized
-                accg, lossg = WK.evaluate_global_flat(buf, alpha, x_test,
+                # matvec; no stacked pytree is materialized.  A padded
+                # sharded buffer evals its first N rows only (padding rows
+                # are idle replicas of w_0 and must not enter the means)
+                view = buf if buf.shape[0] == cfg.n_workers \
+                    else buf[:cfg.n_workers]
+                accg, lossg = WK.evaluate_global_flat(view, alpha, x_test,
                                                       y_test, spec=flat_spec)
-                accl, _ = WK.evaluate_stacked_flat(buf, x_test, y_test,
+                accl, _ = WK.evaluate_stacked_flat(view, x_test, y_test,
                                                    spec=flat_spec)
             else:
                 accg, lossg = WK.evaluate_global(stacked, alpha, x_test,

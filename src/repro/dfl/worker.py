@@ -19,6 +19,17 @@ Default hot paths (each with a flag-gated slower oracle):
   * fused local-steps SGD — Eq. 5 as one unrolled manual-backward jit region
     over the gathered active rows (``local_sgd_flat_fused``; oracle
     ``local_sgd_flat``, the per-step AD scan).
+
+Mesh-sharded fleet: every dispatch takes an optional static ``shd``
+(``sharding.rules.FleetSharding``).  When set, the (N_pad, P) buffer is
+row-partitioned over the 1-D fleet mesh and the same code paths carry
+sharding constraints instead of forking: the row-sparse mix psums shard-local
+slabs, the column-sparse mix all_gathers only the union rows and splits the
+output rows, gathered active-row SGD shards over k when it divides, and the
+scatter-backs land shard-local for home rows (see
+``kernels.aggregate.aggregate_rows_sharded`` /
+``aggregate_rows_cols_sharded``).  ``shd=None`` (the default) is bit-for-bit
+the unsharded engine.
 """
 from __future__ import annotations
 
@@ -170,12 +181,38 @@ def mlp_loss_flat(vec: jnp.ndarray, spec: FS.FlatSpec, x: jnp.ndarray,
     return mlp_loss(FS.unravel_row(vec, spec), x, y)
 
 
+def _pin(x, sharding):
+    """``with_sharding_constraint``; identity when ``sharding`` is None (the
+    unsharded engine) — one guard for every hot path."""
+    if sharding is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
+def _pin_rows(x, shd):
+    """Pin to the fleet row partition (no-op without a mesh)."""
+    return _pin(x, shd.rows() if shd is not None else None)
+
+
+def _pin_repl(x, shd):
+    """Pin to fully replicated (no-op without a mesh)."""
+    return _pin(x, shd.replicated() if shd is not None else None)
+
+
 def _mix_rows(buf: jnp.ndarray, w_rows: jnp.ndarray, col_ids,
-              use_kernel: bool) -> jnp.ndarray:
+              use_kernel: bool, shd=None) -> jnp.ndarray:
     """The scatter-free Eq. 4 contraction: (k, N) @ (N, P), or column-sparse
     (k, u) @ (u, P) over the gathered union slab when ``col_ids`` is given.
-    Single source for the kernel/jnp variants, shared by ``mix_flat``,
-    ``mix_flat_cols`` and the ``mix_is_train`` fused path."""
+    Single source for the kernel/jnp/mesh variants, shared by ``mix_flat``,
+    ``mix_flat_cols`` and the ``mix_is_train`` fused path.  With ``shd`` the
+    mesh-aware twins run (shard-local slab contraction + psum, or union
+    all_gather + output-row split); Pallas cannot be auto-partitioned, so
+    ``use_kernel`` is rejected host-side before a sharded dispatch."""
+    if shd is not None:
+        from repro.kernels import aggregate as AGG
+        return (AGG.aggregate_rows_cols_sharded(w_rows, col_ids, buf, shd)
+                if col_ids is not None
+                else AGG.aggregate_rows_sharded(w_rows, buf, shd))
     if use_kernel:
         from repro.kernels import ops as K
         return (K.aggregate_rows_cols(w_rows, col_ids, buf)
@@ -186,20 +223,23 @@ def _mix_rows(buf: jnp.ndarray, w_rows: jnp.ndarray, col_ids,
 
 
 def mix_flat(buf: jnp.ndarray, w_rows: jnp.ndarray, row_ids: jnp.ndarray,
-             use_kernel: bool = False) -> jnp.ndarray:
+             use_kernel: bool = False, shd=None) -> jnp.ndarray:
     """Sparse Eq. 4 over the flat buffer: mix the k non-identity rows only.
 
     ``w_rows`` (k, N) are the gathered rows of W (see
     ``core.aggregation.mixing_rows``); all other rows of W are identity, so
-    gather -> (k, N) @ (N, P) -> scatter is exact.
+    gather -> (k, N) @ (N, P) -> scatter is exact.  Sharded (``shd``): the
+    scatter is shard-local for home rows and the buffer is re-pinned to its
+    row partition.
     """
     if w_rows.shape[0] == 0:
         return buf
-    return buf.at[row_ids].set(_mix_rows(buf, w_rows, None, use_kernel))
+    buf = buf.at[row_ids].set(_mix_rows(buf, w_rows, None, use_kernel, shd))
+    return _pin_rows(buf, shd)
 
 
 def mix_flat_cols(buf: jnp.ndarray, w_sub: jnp.ndarray, row_ids: jnp.ndarray,
-                  col_ids: jnp.ndarray, use_kernel: bool = False
+                  col_ids: jnp.ndarray, use_kernel: bool = False, shd=None
                   ) -> jnp.ndarray:
     """Column-sparse Eq. 4 over the flat buffer: the default mix hot path.
 
@@ -212,7 +252,8 @@ def mix_flat_cols(buf: jnp.ndarray, w_sub: jnp.ndarray, row_ids: jnp.ndarray,
     """
     if w_sub.shape[0] == 0:
         return buf
-    return buf.at[row_ids].set(_mix_rows(buf, w_sub, col_ids, use_kernel))
+    buf = buf.at[row_ids].set(_mix_rows(buf, w_sub, col_ids, use_kernel, shd))
+    return _pin_rows(buf, shd)
 
 
 def sample_batches_device(key, worker_ids: jnp.ndarray, data_x: jnp.ndarray,
@@ -386,8 +427,8 @@ def _mix_train_body(buf: jnp.ndarray, w_rows: jnp.ndarray,
                     train_row_ids: jnp.ndarray,
                     train_mask: jnp.ndarray, xb, yb, spec: FS.FlatSpec,
                     lr: float, use_kernel: bool, fused_sgd: bool,
-                    with_losses: bool = True, mix_is_train: bool = False
-                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                    with_losses: bool = True, mix_is_train: bool = False,
+                    shd=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Mix + masked SGD on pre-sampled batches — the buffer-dependent half of
     a round, shared by ``round_step`` and ``mega_round_step``'s scan body
     (batch sampling is buffer-INdependent, so the mega path hoists it out of
@@ -401,44 +442,57 @@ def _mix_train_body(buf: jnp.ndarray, w_rows: jnp.ndarray,
     pullers) lets the fused lowering consume the mixed rows directly: the
     Eq. 4 output feeds Eq. 5 without the intermediate scatter into the
     buffer and re-gather of the same rows — bit-identical values, one
-    full-width buffer write less per round."""
+    full-width buffer write less per round.
+
+    ``shd`` (mesh-sharded buffer): the gathered (k, ·) training operands are
+    constrained to split over the fleet axis whenever k divides the shard
+    count — local SGD then runs on k/S rows per shard — and the buffer is
+    re-pinned to its row partition after every scatter."""
     n = buf.shape[0]
-    if fused_sgd and mix_is_train and train_row_ids.shape[0] > 0 \
-            and w_rows.shape[0] > 0:
-        sub = _mix_rows(buf, w_rows, col_ids, use_kernel)
-        new_sub, sub_loss = local_sgd_flat_fused(sub, xb, yb, train_mask,
-                                                 spec, lr,
-                                                 with_losses=with_losses)
-        buf = buf.at[train_row_ids].set(new_sub)
+    k_train = train_row_ids.shape[0]
+    sub_shd = shd.for_rows(k_train) if shd is not None else None
+
+    def train_rows(sub):
+        sub = _pin(sub, sub_shd)
+        x_s = _pin(xb, sub_shd)
+        y_s = _pin(yb, sub_shd)
+        if fused_sgd:
+            new_sub, sub_loss = local_sgd_flat_fused(sub, x_s, y_s,
+                                                     train_mask, spec, lr,
+                                                     with_losses=with_losses)
+        else:
+            new_sub, sub_loss = local_sgd_flat(sub, x_s, y_s, train_mask,
+                                               spec, lr)
+        return _pin(new_sub, sub_shd), sub_loss
+
+    if fused_sgd and mix_is_train and k_train > 0 and w_rows.shape[0] > 0:
+        sub = _mix_rows(buf, w_rows, col_ids, use_kernel, shd)
+        new_sub, sub_loss = train_rows(sub)
+        buf = _pin_rows(buf.at[train_row_ids].set(new_sub), shd)
         losses = jnp.zeros((n,), jnp.float32)
         if with_losses:
             losses = losses.at[train_row_ids].set(sub_loss * train_mask)
-        return buf, losses
+        return buf, _pin_repl(losses, shd)
     if col_ids is not None:
         buf = mix_flat_cols(buf, w_rows, mix_row_ids, col_ids,
-                            use_kernel=use_kernel)
+                            use_kernel=use_kernel, shd=shd)
     else:
-        buf = mix_flat(buf, w_rows, mix_row_ids, use_kernel=use_kernel)
+        buf = mix_flat(buf, w_rows, mix_row_ids, use_kernel=use_kernel,
+                       shd=shd)
     losses = jnp.zeros((n,), jnp.float32)
-    if train_row_ids.shape[0] == 0:
+    if k_train == 0:
         return buf, losses
-    sub = buf[train_row_ids]                       # (k, P) activated models
-    if fused_sgd:
-        new_sub, sub_loss = local_sgd_flat_fused(sub, xb, yb, train_mask,
-                                                 spec, lr,
-                                                 with_losses=with_losses)
-    else:
-        new_sub, sub_loss = local_sgd_flat(sub, xb, yb, train_mask, spec, lr)
-    buf = buf.at[train_row_ids].set(new_sub)
+    new_sub, sub_loss = train_rows(buf[train_row_ids])
+    buf = _pin_rows(buf.at[train_row_ids].set(new_sub), shd)
     if with_losses:
         losses = losses.at[train_row_ids].set(sub_loss * train_mask)
-    return buf, losses
+    return buf, _pin_repl(losses, shd)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("spec", "lr", "local_steps", "batch_size",
                                     "use_kernel", "col_sparse", "fused_sgd",
-                                    "with_losses", "mix_is_train"),
+                                    "with_losses", "mix_is_train", "shd"),
                    donate_argnums=(0,))
 def round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
                data_x: jnp.ndarray, data_y: jnp.ndarray,
@@ -446,8 +500,8 @@ def round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
                *, spec: FS.FlatSpec, lr: float, local_steps: int,
                batch_size: int, use_kernel: bool = False,
                col_sparse: bool = False, fused_sgd: bool = False,
-               with_losses: bool = True, mix_is_train: bool = False
-               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+               with_losses: bool = True, mix_is_train: bool = False,
+               shd=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One fused simulated round: sparse mix + on-device sampling + local SGD.
 
     Both halves of the round exploit the same active-row sparsity: Eq. 4 only
@@ -463,8 +517,10 @@ def round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
     manual-backward SGD lowering (``local_sgd_flat_fused``).  ``ctrl`` is
     the ``pack_round_ctrl`` concatenation of [mix_row_ids (k_mix,) |
     col_ids (u,) when col_sparse | train_row_ids (k_train,) | train_mask
-    (k_train,)].  Returns (new buffer, per-worker mean loss scattered to
-    (N,), zero for idle workers).
+    (k_train,)].  ``shd`` (static) runs the same round mesh-sharded: the
+    buffer stays row-partitioned across the dispatch and the mix/SGD
+    constraints lower to fleet-axis collectives.  Returns (new buffer,
+    per-worker mean loss scattered to (N,), zero for idle workers).
     """
     k_mix = w_rows.shape[0]
     u = w_rows.shape[1] if col_sparse and k_mix else 0
@@ -479,10 +535,22 @@ def round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
                                        local_steps, batch_size)
     return _mix_train_body(buf, w_rows, mix_row_ids, col_ids, train_row_ids,
                            train_mask, xb, yb, spec, lr, use_kernel,
-                           fused_sgd, with_losses, mix_is_train)
+                           fused_sgd, with_losses, mix_is_train, shd)
 
 
-def pack_horizon(plans, min_bucket: int = 8, col_sparse: bool = False
+def pad_w_cols(w: np.ndarray, n_pad: int) -> np.ndarray:
+    """Zero-pad the trailing (N) axis of a row-sparse W stack to the sharded
+    buffer's padded row count: the extra columns multiply the permanently-
+    idle padding rows by 0, so the contraction value is unchanged (summing
+    exact +0.0 terms) while shapes line up with the (N_pad, P) buffer."""
+    if w.shape[-1] >= n_pad:
+        return w
+    pad = [(0, 0)] * (w.ndim - 1) + [(0, n_pad - w.shape[-1])]
+    return np.pad(w, pad)
+
+
+def pack_horizon(plans, min_bucket: int = 8, col_sparse: bool = False,
+                 shards: int = 1
                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Stack H planned rounds' control tensors for ``mega_round_step``.
 
@@ -498,6 +566,11 @@ def pack_horizon(plans, min_bucket: int = 8, col_sparse: bool = False
     are restricted to the horizon-max bucket of each round's nonzero-column
     union (``PlannedRound.mix_cols`` when the planner resolved it, else
     re-derived), and the union's ``col_ids`` ride in ``ctrl``.
+
+    ``shards > 1`` selects the shard-local padding layout of
+    ``aggregation.padded_rows`` throughout (sorted ids, per-shard padding
+    candidates); a sharded planner resolves ``mix_cols`` with the same shard
+    count, keeping padding columns inside the union.
 
     Returns ``(w_rows (H, K_mix, N | U) f32, ctrl (H, K_mix [+ U] +
     2*K_train) i32, ts (H,) i32)`` — three host arrays, so the whole horizon
@@ -516,7 +589,7 @@ def pack_horizon(plans, min_bucket: int = 8, col_sparse: bool = False
     if col_sparse:
         def cols_of(p):
             return (p.mix_cols if getattr(p, "mix_cols", None) is not None
-                    else col_union_mask(p.active, p.links))
+                    else col_union_mask(p.active, p.links, shards))
 
         u = max(bucket_size(int(cols_of(p).sum()), n, min_bucket)
                 for p in plans) if k_mix else 0
@@ -527,9 +600,9 @@ def pack_horizon(plans, min_bucket: int = 8, col_sparse: bool = False
         for i, p in enumerate(plans):
             w_sub, mix_ids, col_ids = mixing_rows_cols(
                 p.W, p.active, p.links, min_bucket, pad_to=k_mix,
-                col_pad_to=u, cols_mask=cols_of(p))
+                col_pad_to=u, cols_mask=cols_of(p), shards=shards)
             train_ids, train_mask = padded_rows(p.active, min_bucket,
-                                                pad_to=k_train)
+                                                pad_to=k_train, shards=shards)
             if k_mix:
                 w_rows_h[i] = w_sub
             ctrl_h[i] = pack_round_ctrl(mix_ids, train_ids, train_mask,
@@ -540,9 +613,9 @@ def pack_horizon(plans, min_bucket: int = 8, col_sparse: bool = False
     ctrl_h = np.zeros((h, k_mix + 2 * k_train), np.int32)
     for i, p in enumerate(plans):
         w_rows, mix_ids = mixing_rows(p.W, p.active, p.links, min_bucket,
-                                      pad_to=k_mix)
+                                      pad_to=k_mix, shards=shards)
         train_ids, train_mask = padded_rows(p.active, min_bucket,
-                                            pad_to=k_train)
+                                            pad_to=k_train, shards=shards)
         if k_mix:
             w_rows_h[i] = w_rows
         ctrl_h[i] = pack_round_ctrl(mix_ids, train_ids, train_mask)
@@ -553,7 +626,7 @@ def pack_horizon(plans, min_bucket: int = 8, col_sparse: bool = False
 @functools.partial(jax.jit,
                    static_argnames=("spec", "lr", "local_steps", "batch_size",
                                     "use_kernel", "col_sparse", "fused_sgd",
-                                    "with_losses", "mix_is_train"),
+                                    "with_losses", "mix_is_train", "shd"),
                    donate_argnums=(0,))
 def mega_round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
                     ts: jnp.ndarray, data_x: jnp.ndarray, data_y: jnp.ndarray,
@@ -561,8 +634,8 @@ def mega_round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
                     *, spec: FS.FlatSpec, lr: float, local_steps: int,
                     batch_size: int, use_kernel: bool = False,
                     col_sparse: bool = False, fused_sgd: bool = False,
-                    with_losses: bool = True, mix_is_train: bool = False
-                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                    with_losses: bool = True, mix_is_train: bool = False,
+                    shd=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """H horizon-planned rounds as ONE donated ``lax.scan`` dispatch.
 
     The control plane is model-value-independent, so ``core.planner`` resolves
@@ -581,7 +654,8 @@ def mega_round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
     ``col_sparse``/``fused_sgd`` select the column-sparse contraction and
     the unrolled SGD lowering exactly as in ``round_step`` (with
     ``pack_horizon(col_sparse=True)`` stacks: ``w_rows (H, K_mix, U)`` and
-    the per-round ``col_ids`` riding in ``ctrl``).
+    the per-round ``col_ids`` riding in ``ctrl``); ``shd`` (static) runs the
+    whole scan mesh-sharded with the buffer row-partitioned across steps.
     Returns (new buffer, (H, N) per-round losses).
     """
     k_mix = w_rows.shape[1]
@@ -602,7 +676,7 @@ def mega_round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
             w, mids, cids, tids, mask, x, y = xs
             return _mix_train_body(b, w, mids, cids, tids, mask, x, y, spec,
                                    lr, use_kernel, fused_sgd, with_losses,
-                                   mix_is_train)
+                                   mix_is_train, shd)
 
         return jax.lax.scan(body, buf, (w_rows, mix_ids, col_ids, train_ids,
                                         masks, xb, yb))
@@ -611,6 +685,6 @@ def mega_round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
         w, mids, tids, mask, x, y = xs
         return _mix_train_body(b, w, mids, None, tids, mask, x, y, spec, lr,
                                use_kernel, fused_sgd, with_losses,
-                               mix_is_train)
+                               mix_is_train, shd)
 
     return jax.lax.scan(body, buf, (w_rows, mix_ids, train_ids, masks, xb, yb))

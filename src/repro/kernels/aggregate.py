@@ -93,6 +93,49 @@ def aggregate_rows_cols(W_sub: jnp.ndarray, col_ids: jnp.ndarray,
     return _panel_matmul(W_sub, slab, p_blk, _resolve_interpret(interpret))
 
 
+# --------------------------------------------------------------------------- #
+# mesh-aware twins: the sharded fleet engine's Eq. 4 contractions
+# --------------------------------------------------------------------------- #
+#
+# When the flat buffer is row-partitioned over the 1-D fleet mesh
+# (``sharding.rules.FleetSharding``) the contraction is expressed as jnp +
+# sharding constraints and GSPMD lowers the collectives; ``pallas_call``
+# cannot be auto-partitioned, so the Pallas panel schedule above stays the
+# single-device/TPU lowering (a per-shard shard_map wrapping of it is the
+# natural TPU follow-up once the mesh is real hardware).  Both twins are
+# value-exact against their dense oracles — only reduction order differs.
+
+
+def aggregate_rows_sharded(W_rows: jnp.ndarray, X: jnp.ndarray,
+                           shd) -> jnp.ndarray:
+    """Row-sparse Eq. 4 over a row-sharded buffer: Y_rows = W_rows @ X.
+
+    The contraction axis IS the sharded axis, so each shard contracts its
+    resident ``(k, N_s) @ (N_s, P)`` slab and GSPMD finishes with one psum
+    (all-reduce) over the fleet axis; the replicated constraint on the output
+    pins that lowering.  ``shd`` is a ``sharding.rules.FleetSharding``.
+    """
+    y = W_rows.astype(jnp.float32) @ X
+    return jax.lax.with_sharding_constraint(y, shd.replicated())
+
+
+def aggregate_rows_cols_sharded(W_sub: jnp.ndarray, col_ids: jnp.ndarray,
+                                X: jnp.ndarray, shd) -> jnp.ndarray:
+    """Column-sparse Eq. 4 over a row-sharded buffer.
+
+    The union gather ``X[col_ids]`` is constrained replicated — an all_gather
+    of ONLY the u <= k*(max_neighbors+1) union rows, not the whole (N, P)
+    buffer — and the ``(k, u) @ (u, P)`` contraction is constrained to split
+    its k OUTPUT rows over the fleet axis (when k divides evenly), so each
+    shard computes the mixed rows it will scatter back locally.  This is the
+    cross-shard traffic floor of one DySTop round: u rows in, k/S rows of
+    compute per shard, zero collective on the scatter for home rows.
+    """
+    slab = jax.lax.with_sharding_constraint(X[col_ids], shd.replicated())
+    y = W_sub.astype(jnp.float32) @ slab
+    return jax.lax.with_sharding_constraint(y, shd.for_rows(W_sub.shape[0]))
+
+
 def _panel_matmul(W: jnp.ndarray, X: jnp.ndarray, p_blk: int,
                   interpret: bool) -> jnp.ndarray:
     """(k, N) @ (N, P) with W VMEM-resident and X/Y in (·, p_blk) panels."""

@@ -22,6 +22,32 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+FLEET_AXIS = "fleet"
+
+
+def make_fleet_mesh(mesh_shards: int):
+    """1-D mesh over the DFL fleet (worker) axis for the sharded engines.
+
+    The resident ``(N, P)`` / ``(N, S)`` fleet buffers partition their row
+    axis over this mesh (``sharding.rules.FleetSharding``), one contiguous
+    block of workers per device — the N-scaling axis of the ROADMAP, distinct
+    from the intra-model (data, model) axes of ``make_production_mesh``
+    (there each DFL worker is a whole pod; here each device holds a SLICE of
+    the fleet).  On hardware the devices are chips; on the CI box the mesh is
+    emulated with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    Raises if the process has fewer devices than requested shards.
+    """
+    if mesh_shards < 1:
+        raise ValueError(f"mesh_shards must be >= 1, got {mesh_shards}")
+    n_dev = len(jax.devices())
+    if mesh_shards > n_dev:
+        raise ValueError(
+            f"mesh_shards={mesh_shards} but only {n_dev} device(s) visible; "
+            f"on CPU set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{mesh_shards} (before jax initializes) to emulate the mesh")
+    return jax.make_mesh((mesh_shards,), (FLEET_AXIS,))
+
+
 # TPU v5e hardware constants used by the roofline analysis
 PEAK_FLOPS_BF16 = 197e12        # per chip
 HBM_BW = 819e9                  # bytes/s per chip

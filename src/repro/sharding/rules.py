@@ -1,4 +1,4 @@
-"""Logical-axis -> mesh-axis mapping.
+"""Logical-axis -> mesh-axis mapping, plus the DFL fleet-sharding handle.
 
 Every parameter / activation in the model zoo is annotated with *logical* axis
 names.  This module turns those names into concrete ``PartitionSpec``s for the
@@ -8,14 +8,23 @@ axis instead of forcing GSPMD padding).
 
 The mapping is a plain dict so the perf-hillclimb harness can override single
 rules (see EXPERIMENTS.md section "Perf").
+
+``FleetSharding`` is the sharded DFL engines' mesh handle: a hashable wrapper
+around the 1-D fleet mesh (``launch.mesh.make_fleet_mesh``) that rides through
+``jax.jit`` as a static argument so the hot paths (``dfl.worker.round_step`` /
+``mega_round_step``, ``dfl.lm_worker.LMEngine``) can place the sharding
+constraints that keep the resident ``(N_pad, P)`` buffers row-partitioned
+across rounds.
 """
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import math
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # Default logical->mesh rules.  Values are tuples of mesh axis names (applied
@@ -135,6 +144,71 @@ def constrain(x, logical_axes: Sequence[Optional[str]]):
         return x
     spec = logical_spec(logical_axes, x.shape)
     return jax.lax.with_sharding_constraint(x, NamedSharding(_ACTIVE.mesh, spec))
+
+
+# --------------------------------------------------------------------------- #
+# DFL fleet sharding: the resident (N, P) buffers' row partition
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSharding:
+    """Hashable handle for the 1-D fleet mesh the sharded DFL engines run on.
+
+    Frozen + built from hashable jax objects, so it is a valid ``jax.jit``
+    static argument: the engine hot paths receive it statically and place
+    ``with_sharding_constraint``s, while the host side uses it to pad the
+    worker axis to a shard multiple (jax requires evenly divisible
+    NamedShardings) and to ``device_put`` operands.  Padding rows are
+    permanently idle: never activated, never a mixing row or column, excluded
+    from evals — they exist only so GSPMD gets an even row split.
+    """
+    mesh: Mesh
+    axis: str = "fleet"
+
+    @classmethod
+    def create(cls, mesh_shards: int) -> "FleetSharding":
+        from repro.launch.mesh import FLEET_AXIS, make_fleet_mesh
+        return cls(mesh=make_fleet_mesh(mesh_shards), axis=FLEET_AXIS)
+
+    @property
+    def n_shards(self) -> int:
+        return self.mesh.shape[self.axis]
+
+    def rows(self) -> NamedSharding:
+        """Leading axis split into contiguous per-device blocks."""
+        return NamedSharding(self.mesh, P(self.axis))
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    def for_rows(self, k: int) -> NamedSharding:
+        """Row sharding when the leading dim splits evenly, else replicated —
+        gathered active-row sets are power-of-two buckets, so they shard
+        whenever k >= n_shards; tiny odd sets (and N-clamped buckets that
+        lost divisibility) fall back to replication rather than erroring."""
+        return self.rows() if k and k % self.n_shards == 0 \
+            else self.replicated()
+
+    def pad(self, n: int) -> int:
+        """Extra permanently-idle rows needed to make n divisible."""
+        return (-n) % self.n_shards
+
+    def put_rows(self, x) -> jax.Array:
+        return jax.device_put(x, self.rows())
+
+    def put_rows_padded(self, x) -> jax.Array:
+        """Row-shard ``x``, first zero-padding its leading axis to a shard
+        multiple — the single definition of the permanently-idle padding
+        rows every resident buffer carries under the mesh."""
+        extra = self.pad(x.shape[0])
+        if extra:
+            x = jnp.concatenate(
+                [x, jnp.zeros((extra,) + x.shape[1:], x.dtype)])
+        return self.put_rows(x)
+
+    def put(self, x) -> jax.Array:
+        return jax.device_put(x, self.replicated())
 
 
 def tree_shardings(logical_tree, shape_tree, mesh: Mesh,
