@@ -22,7 +22,7 @@ import jax
 from benchmarks import (bound_check, comm_overhead, completion_time,
                         convergence_curves, kernels_bench, lm_fleet,
                         neighbor_sweep, phase_ablation, roofline,
-                        round_engine, staleness_sweep, v_sweep)
+                        round_engine, scenarios, staleness_sweep, v_sweep)
 from benchmarks.common import header, records
 
 SUITES = {
@@ -51,6 +51,9 @@ SUITES = {
     "round_engine_sharded": lambda q: round_engine.sharded_main(quick=q),
     # persistent-flat planner-driven LM fleet vs per-call-flatten baseline
     "lm_fleet": lambda q: lm_fleet.main(rounds=12 if q else 24),
+    # scenario/fault-plane degradation curves: presets vs the
+    # no-staleness-control ablation (ROADMAP item 2)
+    "scenarios": lambda q: scenarios.main(rounds=80 if q else 160),
     # deliverable (g): roofline table from the dry-run artifacts
     "roofline": lambda q: roofline.main(),
 }

@@ -1,0 +1,64 @@
+"""Scenario/fault-plane degradation curves (ROADMAP item 2; paper section
+VI's "dynamic edge environment" axis).
+
+Runs every ``core.scenarios`` preset against DySTop AND against the
+no-staleness-control ablation (AsyDFL: FIFO activation, random neighbors, no
+Lyapunov queue), plus a clean no-fault baseline per mechanism.  The paper's
+claim under test: dynamic staleness control degrades gracefully under churn,
+blackouts, stragglers, and mobility, where uncontrolled asynchrony
+accumulates staleness and loses accuracy.
+
+Emitted ``derived`` fields: final global accuracy, degradation in percentage
+points versus the same mechanism's clean run, worst-case staleness, and total
+comm volume.  The ``degradation_gap`` rows summarize DySTop's edge: ablation
+drop minus DySTop drop (positive = staleness control helped).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, us_per_round
+from repro.core.baselines import get_mechanism
+from repro.core.scenarios import SCENARIO_PRESETS
+from repro.dfl.simulator import SimConfig, run_simulation
+
+MECHS = ("dystop", "asydfl")
+
+
+def _run(mech: str, scenario, rounds: int, workers: int, seed: int):
+    kw = {"V": 10.0, "t_thre": rounds // 8} if mech == "dystop" \
+        else {"n_neighbors": 7}
+    cfg = SimConfig(n_workers=workers, n_rounds=rounds, phi=0.4,
+                    n_samples=8000, dim=24, eval_every=max(rounds // 8, 5),
+                    seed=seed, scenario=scenario)
+    return run_simulation(get_mechanism(mech, **kw), cfg)
+
+
+def main(rounds: int = 160, workers: int = 24, seed: int = 0) -> dict:
+    results: dict = {}
+    for mech in MECHS:
+        clean = _run(mech, None, rounds, workers, seed)
+        acc_clean = clean.acc_global[-1]
+        results[(mech, "clean")] = acc_clean
+        emit(f"scenarios/{mech}/clean", us_per_round(clean, rounds),
+             f"acc={acc_clean:.4f} stale_max={max(clean.staleness_max)} "
+             f"comm_GB={clean.comm_gb[-1]:.4f}")
+        for preset in SCENARIO_PRESETS:
+            h = _run(mech, preset, rounds, workers, seed)
+            acc = h.acc_global[-1]
+            results[(mech, preset)] = acc
+            emit(f"scenarios/{mech}/{preset}", us_per_round(h, rounds),
+                 f"acc={acc:.4f} drop={100 * (acc_clean - acc):.2f}pp "
+                 f"stale_max={max(h.staleness_max)} "
+                 f"comm_GB={h.comm_gb[-1]:.4f}")
+    for preset in SCENARIO_PRESETS:
+        dy = results[("dystop", "clean")] - results[("dystop", preset)]
+        ab = results[("asydfl", "clean")] - results[("asydfl", preset)]
+        emit(f"scenarios/degradation_gap/{preset}", 0.0,
+             f"dystop_drop={100 * dy:.2f}pp ablation_drop={100 * ab:.2f}pp "
+             f"gap={100 * (ab - dy):.2f}pp")
+    return results
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    main()

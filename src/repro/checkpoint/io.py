@@ -8,8 +8,9 @@ from __future__ import annotations
 import json
 import os
 import pathlib
+import re
 import tempfile
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -69,7 +70,13 @@ def load_checkpoint(path: str | pathlib.Path, params_template: Any,
                 arr = blobs[full]
             else:
                 raise KeyError(f"checkpoint missing {full}")
-            out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+            if isinstance(leaf, (np.ndarray, np.generic)):
+                # host control-plane leaves stay numpy: routing them through
+                # jax.numpy would silently downcast int64/float64 under the
+                # default x64-disabled mode, breaking bit-exact resume
+                out.append(np.asarray(arr, dtype=leaf.dtype))
+            else:
+                out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
         return jax.tree_util.tree_unflatten(leaves_with_paths[1], out)
 
     params = restore(params_template, "params")
@@ -84,6 +91,47 @@ def _jsonify(obj):
         return [_jsonify(v) for v in obj]
     if isinstance(obj, np.ndarray):
         return obj.tolist()
-    if isinstance(obj, (np.integer, np.floating)):
+    if isinstance(obj, (np.integer, np.floating, np.bool_)):
         return obj.item()
     return obj
+
+
+# -- checkpoint directories --------------------------------------------------
+# One file per snapshot, ``ckpt_round{t:06d}.npz``; the atomic write above
+# means the newest file in the directory is always complete — a kill mid-save
+# leaves only a ``.tmp-*`` turd, never a truncated checkpoint.
+
+_CKPT_RE = re.compile(r"^ckpt_round(\d+)\.npz$")
+
+
+def checkpoint_path(ckpt_dir: str | pathlib.Path, t: int) -> pathlib.Path:
+    """Canonical snapshot filename for round ``t``."""
+    return pathlib.Path(ckpt_dir) / f"ckpt_round{int(t):06d}.npz"
+
+
+def list_checkpoints(ckpt_dir: str | pathlib.Path) -> List[pathlib.Path]:
+    """All snapshots in ``ckpt_dir``, oldest round first."""
+    d = pathlib.Path(ckpt_dir)
+    if not d.is_dir():
+        return []
+    found = [(int(m.group(1)), p) for p in d.iterdir()
+             if (m := _CKPT_RE.match(p.name))]
+    return [p for _, p in sorted(found)]
+
+
+def latest_checkpoint(ckpt_dir: str | pathlib.Path
+                      ) -> Optional[pathlib.Path]:
+    """Newest complete snapshot in ``ckpt_dir`` (None if there are none)."""
+    cks = list_checkpoints(ckpt_dir)
+    return cks[-1] if cks else None
+
+
+def prune_checkpoints(ckpt_dir: str | pathlib.Path, keep: int = 3) -> None:
+    """Delete all but the ``keep`` newest snapshots (and stale .tmp turds)."""
+    cks = list_checkpoints(ckpt_dir)
+    for p in cks[:max(0, len(cks) - keep)]:
+        p.unlink(missing_ok=True)
+    d = pathlib.Path(ckpt_dir)
+    if d.is_dir():
+        for p in d.glob("*.tmp-*.npz"):
+            p.unlink(missing_ok=True)

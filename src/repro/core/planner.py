@@ -148,7 +148,7 @@ class HorizonPlanner:
                  tau_bound: int, bandwidth_budget: float,
                  link_timeout_s: float, sync_link_timeout_s: float,
                  failure_prob: float = 0.0, failure_persist: float = 0.5,
-                 mesh_shards: int = 1):
+                 mesh_shards: int = 1, scenario=None):
         n = len(h_i)
         self.mechanism = mechanism
         self.n_workers = n
@@ -164,6 +164,13 @@ class HorizonPlanner:
         self.sync_link_timeout_s = sync_link_timeout_s
         self.failure_prob = failure_prob
         self.failure_persist = failure_persist
+        # scenario plane (core.scenarios.CompiledScenario or None): timed
+        # fault overlays composed on TOP of the stochastic dynamics.  Every
+        # overlay is a deterministic post-transform of this round's state —
+        # it never consumes or reorders rng draws, so a scenario replays
+        # bit-identically at any horizon, engine, or shard count, and the
+        # no-scenario trajectory is untouched.
+        self.scenario = scenario
         # shard-aware chunking: with a mesh-sharded model plane the planner
         # resolves mixing-column unions (and therefore bucket keys) against
         # the shard layout, so padding rows stay shard-local at dispatch time;
@@ -187,42 +194,72 @@ class HorizonPlanner:
         self.t += 1
         t = self.t
 
+        # scenario overlay for THIS round: resolved before any rng draw so a
+        # rejoiner's staleness reset is visible to the mechanism, but the
+        # overlay itself is rng-free — the stochastic draws below are
+        # identical with and without a scenario.
+        ov = self.scenario.overlay(t) if self.scenario is not None else None
+        if ov is not None and ov.rejoined is not None:
+            # churned-back worker re-syncs before participating: fresh
+            # staleness clock + drained Eq. 33 queue (StalenessState.reset)
+            self.st.reset(ov.rejoined)
+
         # edge dynamics: workers fail and rejoin (paper's "Edge Dynamic" axis)
         if self.failure_prob > 0:
             self.down = ((self.down
                           & (rng.random(n) < self.failure_persist))
                          | (~self.down
                             & (rng.random(n) < self.failure_prob)))
-        up_range = self.in_range & ~self.down[None, :] & ~self.down[:, None]
+        down = self.down
+        in_range = self.in_range
+        if ov is not None:
+            if ov.forced_down is not None:
+                down = down | ov.forced_down      # churn rides the same mask
+            if ov.link_ok is not None:
+                in_range = in_range & ov.link_ok  # blackout / mobility window
+        up_range = in_range & ~down[None, :] & ~down[:, None]
+
+        # straggler windows stretch local compute deterministically
+        h_i = self.h_i if ov is None or ov.compute_scale is None \
+            else self.h_i * ov.compute_scale
 
         # per-round costs (Eq. 7-8 estimate for the coordinator)
-        h_cmp = np.maximum(self.h_i - self.time_since_act, 0.0)
+        h_cmp = np.maximum(h_i - self.time_since_act, 0.0)
         est_com = np.where(up_range, self.exp_link_time, 0.0).max(axis=1)
         round_cost = h_cmp + est_com
 
         ctx = RoundContext(
             t=t, round_cost=round_cost,
-            readiness=self.h_i - self.time_since_act, in_range=up_range,
+            readiness=h_i - self.time_since_act, in_range=up_range,
             class_counts=self.class_counts, phys_dist=self.net.dist,
             pull_counts=self.pull_counts, staleness=self.st,
             bandwidth_budget=self.budget, data_sizes=self.data_sizes, rng=rng)
         dec = self.mechanism.round(ctx)
-        if self.failure_prob > 0:
+        if self.failure_prob > 0 or (ov is not None
+                                     and ov.forced_down is not None):
             # a down worker can neither train nor serve pulls this round
-            dec.active = dec.active & ~self.down
-            dec.links = dec.links & ~self.down[None, :] & ~self.down[:, None]
+            dec.active = dec.active & ~down
+            dec.links = dec.links & ~down[None, :] & ~down[:, None]
+        if ov is not None and ov.link_ok is not None:
+            # blacked-out links are unusable even between up workers —
+            # mechanisms with cached plans (e.g. MATCHA matchings) can still
+            # propose them.  A worker whose neighbors are ALL masked degrades
+            # to its identity mixing row (self-weight 1): graceful, no stall.
+            dec.links = dec.links & ov.link_ok
 
         # actual round duration with sampled (dynamic) channels: the sparse
         # row-max route consumes the identical rng draws as the dense
         # link_rates() but only transforms the round's actual link entries
-        raw_com = self.net.sample_link_row_max(self.model_bytes, dec.links)
+        raw_com = self.net.sample_link_row_max(
+            self.model_bytes, dec.links,
+            rate_scale=None if ov is None else ov.rate_scale)
         if dec.synchronous:
             # a synchronous barrier cannot abort a pull: the aggregation needs
             # every matched neighbor's model, so deep fades stall the whole
             # round until retransmission succeeds (the straggler/dynamics cost
             # the paper measures) — bounded by the stall+retry ceiling
             com_part = np.minimum(raw_com, self.sync_link_timeout_s)
-            cmp_part = self.h_i                            # full retrain (sync)
+            cmp_part = h_i                                 # full retrain (sync)
             eligible = np.ones(n, bool)
         else:
             # async pulls degrade gracefully: abort/retry ceiling
@@ -258,3 +295,50 @@ class HorizonPlanner:
                                         or self.t < max_round):
             plans.append(self.plan_round())
         return plans
+
+    # -- checkpoint/resume ---------------------------------------------------
+    # The planner owns ALL mutable control-plane state, so these two methods
+    # are the complete control half of a crash-safe snapshot: restoring them
+    # into a freshly-constructed planner (same config, same seed-derived
+    # static inputs) makes the next plan_round() bit-identical to the round
+    # the original run would have planned.  The rng state is the numpy
+    # BitGenerator state dict — plain ints/strs, so it survives a JSON
+    # round-trip through checkpoint metadata exactly.
+
+    _STATE_ARRAYS = ("tau", "queue", "pull_counts", "time_since_act",
+                     "budget", "down")
+
+    def state_dict(self) -> dict:
+        """Snapshot every mutable control-plane field (copies, not views)."""
+        return {
+            "arrays": {
+                "tau": self.st.tau.copy(),
+                "queue": self.st.queue.copy(),
+                "pull_counts": self.pull_counts.copy(),
+                "time_since_act": self.time_since_act.copy(),
+                "budget": self.budget.copy(),
+                "down": self.down.copy(),
+            },
+            "scalars": {"t": int(self.t),
+                        "sim_clock": float(self.sim_clock),
+                        "comm_bytes": float(self.comm_bytes)},
+            "rng_state": self.rng.bit_generator.state,
+        }
+
+    def load_state(self, state: dict) -> None:
+        """Restore a ``state_dict()`` snapshot (dtype-exact: the arrays are
+        host numpy and must NOT round-trip through jax, which would silently
+        downcast int64/float64 under the default x64-disabled mode)."""
+        a = state["arrays"]
+        self.st.tau = np.asarray(a["tau"], np.int64).copy()
+        self.st.queue = np.asarray(a["queue"], np.float64).copy()
+        self.pull_counts = np.asarray(a["pull_counts"], np.float64).copy()
+        self.time_since_act = np.asarray(a["time_since_act"],
+                                         np.float64).copy()
+        self.budget = np.asarray(a["budget"], np.float64).copy()
+        self.down = np.asarray(a["down"], bool).copy()
+        s = state["scalars"]
+        self.t = int(s["t"])
+        self.sim_clock = float(s["sim_clock"])
+        self.comm_bytes = float(s["comm_bytes"])
+        self.rng.bit_generator.state = state["rng_state"]

@@ -31,6 +31,19 @@ class StalenessState:
         self.queue = np.maximum(self.queue + self.tau - self.tau_bound, 0.0)
         self.tau = (self.tau + 1) * (~active_mask)
 
+    def reset(self, mask: np.ndarray) -> None:
+        """Zero the staleness clock and virtual queue of the masked workers.
+
+        Scenario-plane rejoin semantics (``core.scenarios``): a worker that
+        churns back in re-syncs before participating, so its rounds-since-
+        activation clock and Eq. 33 queue restart — otherwise the queue
+        integrates the whole absence and WAA over-prioritizes the rejoiner
+        for many rounds after it returns.
+        """
+        mask = np.asarray(mask, bool)
+        self.tau[mask] = 0
+        self.queue[mask] = 0.0
+
     def previewed_tau(self, active_mask: np.ndarray) -> np.ndarray:
         """tau after a hypothetical activation (used by WAA's pre-update)."""
         return (self.tau + 1) * (~np.asarray(active_mask, bool))

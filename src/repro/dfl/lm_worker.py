@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import pathlib
 import time
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
@@ -38,10 +39,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import io as CIO
 from repro.configs.base import ModelConfig
 from repro.core.aggregation import mixing_rows, prefer_cols
 from repro.core.planner import (HorizonPlanner, PlannedRound, chunk_spans,
                                 mix_is_train)
+from repro.core.scenarios import resolve_scenario
 from repro.data.synthetic import make_token_stream
 from repro.dfl import flat_state as FS
 from repro.dfl import worker as WK
@@ -127,7 +130,8 @@ def init_fleet(cfg: ModelConfig, n_workers: int, optimizer: str = "adam",
 
 
 def worker_streams(cfg: ModelConfig, n_workers: int, batch: int, seq: int,
-                   seed: int = 0, noniid_offset: bool = True
+                   seed: int = 0, noniid_offset: bool = True,
+                   skip_rounds: int = 0
                    ) -> Iterator[Dict[str, np.ndarray]]:
     """Per-worker token batches.  Non-IID-ness: each worker samples from a
     different slice of a long stream (distinct local distributions, the LM
@@ -138,6 +142,11 @@ def worker_streams(cfg: ModelConfig, n_workers: int, batch: int, seq: int,
     Python slicing loop.  The per-worker ``rng.integers`` draws are kept
     EXACTLY as the scalar loop made them (same call order, same bounds): the
     rng stream is the trajectory, so only the transform is vectorized.
+
+    ``skip_rounds`` (checkpoint/resume): fast-forward the stream past that
+    many yields by burning the identical rng draws WITHOUT paying the window
+    gathers — the first yield afterwards is bit-identical to yield
+    ``skip_rounds + 1`` of a fresh stream.
     """
     stream = make_token_stream(cfg.vocab_size, 400_000, seed=seed)
     n = len(stream) - seq - 1
@@ -145,12 +154,18 @@ def worker_streams(cfg: ModelConfig, n_workers: int, batch: int, seq: int,
     slice_len = n // n_workers if noniid_offset else n
     # row s of the view is stream[s : s + seq + 1] — tokens + shifted labels
     windows = np.lib.stride_tricks.sliding_window_view(stream, seq + 1)
+
+    def draw(w: int) -> np.ndarray:
+        lo = w * slice_len % max(n - slice_len, 1) if noniid_offset else 0
+        return rng.integers(lo, lo + max(slice_len - seq - 1, 1), size=batch)
+
+    for _ in range(skip_rounds):
+        for w in range(n_workers):
+            draw(w)
     while True:
         starts = np.empty((n_workers, batch), np.int64)
         for w in range(n_workers):
-            lo = w * slice_len % max(n - slice_len, 1) if noniid_offset else 0
-            starts[w] = rng.integers(lo, lo + max(slice_len - seq - 1, 1),
-                                     size=batch)
+            starts[w] = draw(w)
         win = windows[starts]                   # ONE gather: (W, B, seq + 1)
         yield {"tokens": np.ascontiguousarray(win[..., :-1]),
                "labels": np.ascontiguousarray(win[..., 1:]),
@@ -510,6 +525,40 @@ class LMRunConfig:
     comm_range_m: float = 80.0
     compute_sigma: float = 0.6
     use_kernel: bool = False
+    failure_prob: float = 0.0         # stochastic edge dynamics (as SimConfig)
+    failure_persist: float = 0.5
+    scenario: Optional[object] = None # fault plane (core.scenarios): None,
+                                      #   a preset name, or a ScenarioSchedule
+    checkpoint_every: int = 0         # rounds between snapshots; 0 = off
+    checkpoint_dir: Optional[str] = None
+    checkpoint_keep: int = 3
+
+    def __post_init__(self):
+        for f in ("failure_prob", "failure_persist"):
+            v = getattr(self, f)
+            if not (0.0 <= v <= 1.0):
+                raise ValueError(
+                    f"LMRunConfig.{f} must be a probability in [0, 1], got "
+                    f"{v} — out-of-range values silently degenerate the "
+                    f"edge-dynamics mask to 'never' or 'always'")
+        for f in ("link_timeout_s", "sync_link_timeout_s", "lr",
+                  "bandwidth_budget", "comm_range_m"):
+            v = getattr(self, f)
+            if v <= 0:
+                raise ValueError(f"LMRunConfig.{f} must be > 0, got {v}")
+        for f in ("n_workers", "n_rounds", "batch", "seq", "eval_every",
+                  "scan_horizon", "mesh_shards", "min_bucket"):
+            v = getattr(self, f)
+            if v < 1:
+                raise ValueError(f"LMRunConfig.{f} must be >= 1, got {v}")
+        if self.checkpoint_every < 0:
+            raise ValueError(f"LMRunConfig.checkpoint_every must be >= 0 "
+                             f"(0 disables snapshots), got "
+                             f"{self.checkpoint_every}")
+        if self.checkpoint_every > 0 and not self.checkpoint_dir:
+            raise ValueError(
+                "LMRunConfig.checkpoint_every > 0 needs checkpoint_dir: "
+                "pass the directory snapshots should land in")
 
 
 @dataclasses.dataclass
@@ -535,7 +584,8 @@ class LMHistory:
         return dataclasses.asdict(self)
 
 
-def run_lm_federation(mechanism, cfg: ModelConfig, run: LMRunConfig
+def run_lm_federation(mechanism, cfg: ModelConfig, run: LMRunConfig,
+                      resume_from: Optional[str] = None
                       ) -> Tuple[LMFleet, LMHistory]:
     """Federate N replicas of ``cfg`` under ``mechanism``, planner-driven.
 
@@ -544,6 +594,14 @@ def run_lm_federation(mechanism, cfg: ModelConfig, run: LMRunConfig
     plan order on BOTH engine paths, so the batch trajectory — like the
     control trajectory — is bit-for-bit independent of
     ``resident_fleet``/``scan_horizon``.
+
+    ``resume_from`` (see ``run_simulation``): a snapshot file or checkpoint
+    directory from a ``checkpoint_every`` run of the same config; setup
+    replays from the seed, then the resident buffers (f32 storage holds the
+    bf16/int32 leaves losslessly, so the round-trip is bitwise), full planner
+    state, rng streams, and history are restored, and the token stream
+    fast-forwards past the checkpointed rounds (``worker_streams``
+    ``skip_rounds``) — the continuation is bit-identical.
     """
     t_wall = time.time()
     n = run.n_workers
@@ -571,6 +629,8 @@ def run_lm_federation(mechanism, cfg: ModelConfig, run: LMRunConfig
                                     comm_range_m=run.comm_range_m), rng)
     h_i = heterogeneous_compute_times(n, 1.0, rng, sigma=run.compute_sigma)
     model_bytes = float(fleet.model_bytes)
+    scen = resolve_scenario(run.scenario, n, run.n_rounds, dist=net.dist,
+                            comm_range_m=net.cfg.comm_range_m)
     planner = HorizonPlanner(
         mechanism, h_i=h_i, in_range=net.in_range(),
         exp_link_time=net.expected_link_time(model_bytes),
@@ -579,12 +639,57 @@ def run_lm_federation(mechanism, cfg: ModelConfig, run: LMRunConfig
         bandwidth_budget=run.bandwidth_budget,
         link_timeout_s=run.link_timeout_s,
         sync_link_timeout_s=run.sync_link_timeout_s,
-        mesh_shards=run.mesh_shards)
+        failure_prob=run.failure_prob, failure_persist=run.failure_persist,
+        mesh_shards=run.mesh_shards, scenario=scen)
     alpha = jnp.full((n,), 1.0 / n, jnp.float32)
     # Eq. 11 weights over the PADDED row axis: padding rows weigh zero
     alpha_eval = alpha if shd is None else shd.put(
         jnp.concatenate([alpha, jnp.zeros((shd.pad(n),), jnp.float32)]))
     hist = LMHistory()
+
+    # --- crash-safe resume: overwrite the deterministic setup's mutable
+    # state (resident buffers, planner, rng stream, history) and fast-forward
+    # the token stream past the checkpointed rounds.  Placed BEFORE the
+    # engine/oracle setup so the oracle's stacked pytrees materialize from
+    # the restored buffers.
+    if resume_from is not None:
+        ck = pathlib.Path(resume_from)
+        if ck.is_dir():
+            found = CIO.latest_checkpoint(ck)
+            if found is None:
+                raise FileNotFoundError(
+                    f"resume_from={ck} is a directory with no "
+                    f"ckpt_round*.npz snapshot in it")
+            ck = found
+        arr_tmpl = {k: np.zeros_like(v)
+                    for k, v in planner.state_dict()["arrays"].items()}
+        model_tmpl = {
+            "pbuf": np.zeros((n, int(fleet.pbuf.shape[1])), np.float32),
+            "obuf": np.zeros((n, int(fleet.obuf.shape[1])), np.float32)}
+        model, arrays, extra = CIO.load_checkpoint(ck, model_tmpl, arr_tmpl)
+        saved_cfg = extra.get("config", {})
+        checks = {"plane": "lm", "n_workers": n, "seed": run.seed,
+                  "resident_fleet": run.resident_fleet,
+                  "mesh_shards": run.mesh_shards,
+                  "scenario": scen.schedule.name if scen else None}
+        for k, want in checks.items():
+            if k in saved_cfg and saved_cfg[k] != want:
+                raise ValueError(
+                    f"resume config mismatch: snapshot {ck.name} was written "
+                    f"with {k}={saved_cfg[k]!r} but this run has {k}={want!r}"
+                    f" — resuming must use the identical configuration")
+        planner.load_state({"arrays": arrays,
+                            "scalars": extra["planner_scalars"],
+                            "rng_state": extra["planner_rng"]})
+        pbuf, obuf = jnp.asarray(model["pbuf"]), jnp.asarray(model["obuf"])
+        if shd is not None:   # rebuild padded residency exactly as init did
+            pbuf, obuf = shd.put_rows_padded(pbuf), shd.put_rows_padded(obuf)
+        fleet.pbuf, fleet.obuf = pbuf, obuf
+        streams = worker_streams(cfg, n, run.batch, run.seq, seed=run.seed,
+                                 skip_rounds=int(extra["round"]))
+        for k, v in extra["history"].items():
+            if hasattr(hist, k):
+                setattr(hist, k, v)
 
     if run.resident_fleet:
         engine = get_lm_engine(cfg, fleet.optimizer, fleet.spec,
@@ -638,6 +743,34 @@ def run_lm_federation(mechanism, cfg: ModelConfig, run: LMRunConfig
                                    if active.any() else 0.0)
         loss_rows.clear()
 
+    def save_snapshot(t: int) -> None:
+        """Atomic full-state snapshot (see ``run_simulation``).  The f32
+        residency buffers hold the bf16/int32 leaves losslessly, so writing
+        them is the bitwise checkpoint of the whole fleet; the oracle path
+        flattens its stacked pytrees through the same exact round-trip."""
+        snap = planner.state_dict()
+        if run.resident_fleet:
+            pb, ob = fleet.pbuf, fleet.obuf
+        else:
+            pb, _ = FS.flatten_stacked(sp)
+            ob, _ = FS.flatten_stacked(so)
+        model = {"pbuf": np.asarray(jax.block_until_ready(
+                     pb if pb.shape[0] == n else pb[:n])),
+                 "obuf": np.asarray(ob if ob.shape[0] == n else ob[:n])}
+        extra = {
+            "round": t,
+            "planner_scalars": snap["scalars"],
+            "planner_rng": snap["rng_state"],
+            "history": hist.to_dict(),
+            "config": {"plane": "lm", "n_workers": n, "seed": run.seed,
+                       "resident_fleet": run.resident_fleet,
+                       "mesh_shards": run.mesh_shards,
+                       "scenario": scen.schedule.name if scen else None},
+        }
+        CIO.save_checkpoint(CIO.checkpoint_path(run.checkpoint_dir, t),
+                            model, opt_state=snap["arrays"], extra=extra)
+        CIO.prune_checkpoints(run.checkpoint_dir, run.checkpoint_keep)
+
     while planner.t < run.n_rounds:
         p = planner.plan_round()
         b = next(streams)                 # one draw per round, EITHER path
@@ -645,7 +778,10 @@ def run_lm_federation(mechanism, cfg: ModelConfig, run: LMRunConfig
         hist.round_active.append(int(p.active.sum()))
         pending.append((p, b))
         do_eval = p.t % run.eval_every == 0 or p.t == run.n_rounds
-        if do_eval or len(pending) >= horizon:
+        do_ckpt = (run.checkpoint_every > 0
+                   and p.t % run.checkpoint_every == 0)
+        at_boundary = scen is not None and (p.t + 1) in scen.boundaries
+        if do_eval or do_ckpt or at_boundary or len(pending) >= horizon:
             flush()
         if do_eval:
             jax.block_until_ready(fleet.pbuf if run.resident_fleet
@@ -668,6 +804,11 @@ def run_lm_federation(mechanism, cfg: ModelConfig, run: LMRunConfig
             hist.staleness_avg.append(float(planner.st.tau.mean()))
             hist.staleness_max.append(int(planner.st.tau.max()))
             hist.eval_wall_s += time.time() - t_ev
+        if do_ckpt:
+            # after the eval (snapshot history carries the eval point) and
+            # with losses drained, so round_loss is complete up to round t
+            drain_losses()
+            save_snapshot(p.t)
 
     flush()
     drain_losses()

@@ -26,6 +26,25 @@ class NetworkConfig:
     gain_fluctuation: float = 0.2     # lognormal sigma on per-round channel
     dynamics_drop_prob: float = 0.02  # per-round chance a link blinks out
 
+    def __post_init__(self):
+        if self.n_workers < 1:
+            raise ValueError(f"NetworkConfig.n_workers must be >= 1, got "
+                             f"{self.n_workers}")
+        if not (0.0 <= self.dynamics_drop_prob <= 1.0):
+            raise ValueError(
+                f"NetworkConfig.dynamics_drop_prob must be in [0, 1] (a "
+                f"per-round per-link blink-out probability), got "
+                f"{self.dynamics_drop_prob} — values outside the unit "
+                f"interval silently degenerate to 'never' or 'always'")
+        if self.gain_fluctuation < 0.0:
+            raise ValueError(
+                f"NetworkConfig.gain_fluctuation must be >= 0 (a lognormal "
+                f"sigma), got {self.gain_fluctuation}")
+        for f in ("region_m", "comm_range_m", "noise_w", "bandwidth_hz"):
+            v = getattr(self, f)
+            if v <= 0:
+                raise ValueError(f"NetworkConfig.{f} must be > 0, got {v}")
+
 
 class EdgeNetwork:
     """Positions, distances, per-round link rates (bytes/s)."""
@@ -79,19 +98,30 @@ class EdgeNetwork:
         snr = tx_power_w * gain / cfg.noise_w
         return cfg.bandwidth_hz * np.log2(1.0 + snr) / 8.0
 
-    def link_rates(self, dynamic: bool = True) -> np.ndarray:
-        """Per-round Shannon rates (N, N) in bytes/s for j -> i transfers."""
+    def link_rates(self, dynamic: bool = True,
+                   rate_scale: Optional[np.ndarray] = None) -> np.ndarray:
+        """Per-round Shannon rates (N, N) in bytes/s for j -> i transfers.
+
+        ``rate_scale`` (scenario plane, ``core.scenarios.RoundOverlay``): a
+        deterministic (N, N) multiplier applied AFTER sampling — the rng
+        draws are identical with and without it, so fault windows never
+        perturb the trajectory of the rounds around them.
+        """
         gain, drop = self._sample_round_channels(dynamic)
         rate = self._shannon_rate(gain, self.tx_power_w[None, :])
         if drop is not None:
             # edge dynamics: a blinked-out link degrades to a deep fade (the
             # transfer stalls and is re-established, ~50x slower effective rate)
             rate = np.where(drop, rate * 0.02, rate)
+        if rate_scale is not None:
+            rate = rate * rate_scale
         np.fill_diagonal(rate, np.inf)
         return rate
 
     def sample_link_row_max(self, model_bytes: float, needed: np.ndarray,
-                            dynamic: bool = True) -> np.ndarray:
+                            dynamic: bool = True,
+                            rate_scale: Optional[np.ndarray] = None
+                            ) -> np.ndarray:
         """Per-row max transfer TIME (seconds) over the ``needed`` links.
 
         The per-round control plane only ever reads the sampled channels at
@@ -102,6 +132,10 @@ class EdgeNetwork:
         on the needed entries; rows with no needed link return 0.0.  Apply
         timeout ceilings AFTER the row max: ``max_j min(t_j, c) ==
         min(max_j t_j, c)`` since clamping is monotone.
+
+        ``rate_scale`` mirrors ``link_rates``: a deterministic (N, N)
+        multiplier on the sampled rates (scenario degradation windows),
+        applied to the needed entries only — same draws either way.
         """
         gain, drop = self._sample_round_channels(dynamic)
         out = np.zeros(needed.shape[0], np.float64)
@@ -111,6 +145,8 @@ class EdgeNetwork:
         rate = self._shannon_rate(gain[rows, cols], self.tx_power_w[cols])
         if drop is not None:
             rate = np.where(drop[rows, cols], rate * 0.02, rate)
+        if rate_scale is not None:
+            rate = rate * rate_scale[rows, cols]
         np.maximum.at(out, rows, model_bytes / rate)
         return out
 

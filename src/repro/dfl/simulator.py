@@ -14,6 +14,7 @@ every worker every round (the straggler effect the paper measures).
 from __future__ import annotations
 
 import dataclasses
+import pathlib
 import time
 from typing import Dict, List, Optional
 
@@ -21,11 +22,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import io as CIO
 from repro.core.aggregation import (apply_mixing, mixing_rows,
                                     mixing_rows_cols, padded_rows,
                                     prefer_cols)
 from repro.core.planner import (HorizonPlanner, PlannedRound, chunk_spans,
                                 mix_is_train)
+from repro.core.scenarios import resolve_scenario
 from repro.core.protocol import Mechanism
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import (ClassificationData, make_classification,
@@ -132,6 +135,50 @@ class SimConfig:
                                       #   reduction-order tolerance
     n_samples: int = 20000
     dim: int = 32
+    scenario: Optional[object] = None # fault-injection plane (core.scenarios):
+                                      #   None, a preset name ("churn20",
+                                      #   "blackout", "straggler_tail",
+                                      #   "mobile"), or a ScenarioSchedule.
+                                      #   Overlays are rng-free, so a scenario
+                                      #   replays bit-identically on every
+                                      #   engine path and shard count
+    checkpoint_every: int = 0         # rounds between atomic snapshots
+                                      #   (checkpoint/io); 0 = off.  Snapshot
+                                      #   rounds force a chunk flush in EVERY
+                                      #   run so resumed and uninterrupted
+                                      #   trajectories share flush boundaries
+    checkpoint_dir: Optional[str] = None   # where snapshots land (required
+                                      #   when checkpoint_every > 0)
+    checkpoint_keep: int = 3          # prune to this many newest snapshots
+
+    def __post_init__(self):
+        for f in ("failure_prob", "failure_persist"):
+            v = getattr(self, f)
+            if not (0.0 <= v <= 1.0):
+                raise ValueError(
+                    f"SimConfig.{f} must be a probability in [0, 1], got "
+                    f"{v} — out-of-range values silently degenerate the "
+                    f"edge-dynamics mask to 'never' or 'always'")
+        for f in ("link_timeout_s", "sync_link_timeout_s", "base_compute_s",
+                  "lr", "model_bytes_scale", "bandwidth_budget"):
+            v = getattr(self, f)
+            if v <= 0:
+                raise ValueError(f"SimConfig.{f} must be > 0, got {v} — a "
+                                 f"non-positive value makes Eq. 7-9 round "
+                                 f"durations meaningless")
+        for f in ("n_workers", "n_rounds", "batch_size", "local_steps",
+                  "eval_every", "scan_horizon", "mesh_shards"):
+            v = getattr(self, f)
+            if v < 1:
+                raise ValueError(f"SimConfig.{f} must be >= 1, got {v}")
+        if self.checkpoint_every < 0:
+            raise ValueError(f"SimConfig.checkpoint_every must be >= 0 "
+                             f"(0 disables snapshots), got "
+                             f"{self.checkpoint_every}")
+        if self.checkpoint_every > 0 and not self.checkpoint_dir:
+            raise ValueError(
+                "SimConfig.checkpoint_every > 0 needs checkpoint_dir: pass "
+                "the directory snapshots should land in")
 
 
 @dataclasses.dataclass
@@ -172,7 +219,22 @@ class History:
 def run_simulation(mechanism: Mechanism, cfg: SimConfig,
                    data: Optional[ClassificationData] = None,
                    test: Optional[ClassificationData] = None,
-                   record_history_for_bound: bool = False) -> History:
+                   record_history_for_bound: bool = False,
+                   resume_from: Optional[str] = None) -> History:
+    """Run (or resume) one simulation-plane federation.
+
+    ``resume_from``: a snapshot file (or a checkpoint directory, meaning its
+    newest snapshot) written by a ``checkpoint_every`` run of the SAME config.
+    Setup replays deterministically from ``cfg.seed`` (consuming the identical
+    setup rng draws), then the saved model rows, full planner control state,
+    numpy rng stream, and history are restored — so the continued run is
+    bit-identical on the control plane and f32-equal on the learning curve to
+    the uninterrupted run.
+    """
+    if resume_from is not None and record_history_for_bound:
+        raise ValueError("resume_from cannot record a bound log: the "
+                         "pre-kill rounds' active/W history is not "
+                         "checkpointed")
     rng = np.random.default_rng(cfg.seed)
     t_wall = time.time()
 
@@ -256,6 +318,8 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
     # (staleness, pull counts, readiness clocks, failure mask, sim clock) and
     # replays Alg. 1 bookkeeping round-by-round — model-value-independent, so
     # it can run arbitrarily far ahead of the device dispatches
+    scen = resolve_scenario(cfg.scenario, cfg.n_workers, cfg.n_rounds,
+                            dist=net.dist, comm_range_m=net.cfg.comm_range_m)
     planner = HorizonPlanner(
         mechanism, h_i=h_i, in_range=in_range, exp_link_time=exp_link_time,
         model_bytes=model_bytes, class_counts=class_counts,
@@ -264,12 +328,61 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
         link_timeout_s=cfg.link_timeout_s,
         sync_link_timeout_s=cfg.sync_link_timeout_s,
         failure_prob=cfg.failure_prob, failure_persist=cfg.failure_persist,
-        mesh_shards=cfg.mesh_shards)
+        mesh_shards=cfg.mesh_shards, scenario=scen)
     x_test = jnp.asarray(test.x)
     y_test = jnp.asarray(test.y)
 
     hist = History()
     bound_log = {"active": [], "W": []} if record_history_for_bound else None
+
+    # --- crash-safe resume: overwrite the deterministic setup's mutable
+    # state with the snapshot.  Setup above consumed the exact same rng
+    # draws as the original run's setup, so only the planner state, the
+    # model rows, the (legacy) batch stream, and the history need restoring.
+    if resume_from is not None:
+        ck = pathlib.Path(resume_from)
+        if ck.is_dir():
+            found = CIO.latest_checkpoint(ck)
+            if found is None:
+                raise FileNotFoundError(
+                    f"resume_from={ck} is a directory with no "
+                    f"ckpt_round*.npz snapshot in it")
+            ck = found
+        arr_tmpl = {k: np.zeros_like(v)
+                    for k, v in planner.state_dict()["arrays"].items()}
+        if cfg.fused_engine:
+            n_params = int(buf.shape[1])
+            model_tmpl = {"buf": np.zeros((cfg.n_workers, n_params),
+                                          np.float32)}
+            model, arrays, extra = CIO.load_checkpoint(ck, model_tmpl,
+                                                       arr_tmpl)
+        else:
+            model, arrays, extra = CIO.load_checkpoint(ck, stacked, arr_tmpl)
+        saved_cfg = extra.get("config", {})
+        for k in ("plane", "n_workers", "seed", "fused_engine",
+                  "mesh_shards", "scenario"):
+            want = {"plane": "sim",
+                    "scenario": scen.schedule.name if scen else None
+                    }.get(k, getattr(cfg, k, None))
+            if k in saved_cfg and saved_cfg[k] != want:
+                raise ValueError(
+                    f"resume config mismatch: snapshot {ck.name} was written "
+                    f"with {k}={saved_cfg[k]!r} but this run has {k}={want!r}"
+                    f" — resuming must use the identical configuration")
+        planner.load_state({"arrays": arrays,
+                            "scalars": extra["planner_scalars"],
+                            "rng_state": extra["planner_rng"]})
+        if cfg.fused_engine:
+            restored = jnp.asarray(model["buf"])
+            # rebuild the padded+sharded residency exactly as first init did
+            buf = (shd.put_rows_padded(restored) if shd is not None
+                   else restored)
+        else:
+            stacked = model
+            batch_rng.bit_generator.state = extra["batch_rng"]
+        for k, v in extra["history"].items():
+            if hasattr(hist, k):
+                setattr(hist, k, v)
     horizon = max(1, cfg.scan_horizon) if cfg.fused_engine else 1
     # the fused SGD lowering hand-differentiates the sim-plane MLP; any other
     # architecture plugged into the flat buffer falls back to the AD scan
@@ -357,6 +470,33 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
                                             lr=cfg.lr,
                                             local_steps=cfg.local_steps)
 
+    def save_snapshot(t: int) -> None:
+        """Atomic full-state snapshot: model rows + complete planner control
+        state + rng streams + history.  Called only at flush boundaries, so
+        the device buffer is round-consistent when read back to host."""
+        snap = planner.state_dict()
+        if cfg.fused_engine:
+            view = buf if buf.shape[0] == cfg.n_workers \
+                else buf[:cfg.n_workers]
+            model = {"buf": np.asarray(jax.block_until_ready(view))}
+        else:
+            model = stacked
+        extra = {
+            "round": t,
+            "planner_scalars": snap["scalars"],
+            "planner_rng": snap["rng_state"],
+            "history": hist.to_dict(),
+            "config": {"plane": "sim", "n_workers": cfg.n_workers,
+                       "seed": cfg.seed, "fused_engine": cfg.fused_engine,
+                       "mesh_shards": cfg.mesh_shards,
+                       "scenario": scen.schedule.name if scen else None},
+        }
+        if not cfg.fused_engine:
+            extra["batch_rng"] = batch_rng.bit_generator.state
+        CIO.save_checkpoint(CIO.checkpoint_path(cfg.checkpoint_dir, t),
+                            model, opt_state=snap["arrays"], extra=extra)
+        CIO.prune_checkpoints(cfg.checkpoint_dir, cfg.checkpoint_keep)
+
     hist.setup_wall_s = time.time() - t_wall
     pending: list[PlannedRound] = []
     stop = False
@@ -384,7 +524,15 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
             stop = sim_clock >= cfg.max_sim_time
         else:
             do_eval = t % cfg.eval_every == 0 or t == cfg.n_rounds
-        if do_eval or stop or t == cfg.n_rounds or len(pending) >= horizon:
+        # snapshot rounds are forced flush boundaries in EVERY checkpointing
+        # run (resumed or not), so both share chunk splits; scenario event
+        # boundaries also flush, keeping lax.scan mega-rounds from straddling
+        # a fault-phase change (alignment, not correctness — overlays are
+        # per-round and chunk splits are bit-exact anyway)
+        do_ckpt = cfg.checkpoint_every > 0 and t % cfg.checkpoint_every == 0
+        at_boundary = scen is not None and (t + 1) in scen.boundaries
+        if (do_eval or stop or t == cfg.n_rounds or do_ckpt or at_boundary
+                or len(pending) >= horizon):
             flush(pending)
             pending = []
         if do_eval:
@@ -421,6 +569,10 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
                 hist.completion_time = sim_clock
                 hist.completion_comm_gb = planner.comm_bytes / 1e9
             hist.eval_wall_s += time.time() - t_eval
+        if do_ckpt:
+            # after the eval so a snapshot at an eval round carries that
+            # round's history point — the resumed run never re-evals it
+            save_snapshot(t)
 
     hist.wall_s = time.time() - t_wall
     if bound_log is not None:

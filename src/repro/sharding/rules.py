@@ -91,6 +91,21 @@ def active_mesh() -> Optional[Mesh]:
     return _ACTIVE.mesh if _ACTIVE is not None else None
 
 
+def abstract_mesh(sizes: Sequence[int], names: Sequence[str]):
+    """Version-agnostic ``jax.sharding.AbstractMesh`` constructor.
+
+    jax 0.4.x takes ``shape_tuple=((name, size), ...)``; 0.5+ takes
+    ``(sizes, names)`` positionally.  Spec resolution (``logical_spec`` /
+    ``tree_shardings``) only reads ``.shape`` / ``.axis_names``, which both
+    layouts expose identically, so either construction works downstream.
+    """
+    try:
+        return jax.sharding.AbstractMesh(tuple(sizes), tuple(names))
+    except TypeError:
+        return jax.sharding.AbstractMesh(
+            tuple(zip(tuple(names), tuple(sizes))))
+
+
 def _resolve_dim(logical: Optional[str], dim: int, mesh: Mesh,
                  rules: Dict[str, Optional[Tuple[str, ...]]],
                  used: Optional[set] = None):

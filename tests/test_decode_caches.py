@@ -12,6 +12,7 @@ from repro.configs.base import INPUT_SHAPES, ShapeSpec
 from repro.launch import steps as S
 from repro.models import registry as R
 from repro.models import transformer as T
+from repro.sharding import rules as SR
 
 
 def test_ring_buffer_wraparound_matches_forward():
@@ -54,16 +55,12 @@ def test_hybrid_wraparound():
     np.testing.assert_allclose(d, f, rtol=0.08, atol=0.2)
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="known pre-existing jax-0.4.37 break: AbstractMesh((16, 16), names)"
-           " signature mismatch (TypeError in mesh construction); see ROADMAP")
 @pytest.mark.parametrize("arch", ["gemma2-2b", "mamba2-2.7b", "seamless-m4t-medium"])
 def test_serve_artifact_shardings_build(arch):
     """Cache sharding specs must build for every decode shape on the abstract
     production meshes (structure-only; no devices needed)."""
     cfg = R.get_config(arch)
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    mesh = SR.abstract_mesh((16, 16), ("data", "model"))
     for shape_name in ("decode_32k", "long_500k"):
         if shape_name == "long_500k" and not R.long_context_capable(cfg):
             continue

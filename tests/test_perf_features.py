@@ -109,12 +109,8 @@ ENTRY %main.1 (a: f32[4]) -> f32[4] {
     assert out["all-gather"] == 9 * 16       # 9 trips x 4 f32
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="known pre-existing jax-0.4.37 break: AbstractMesh((16, 16), names)"
-           " signature mismatch (TypeError in mesh construction); see ROADMAP")
 def test_moe_sharding_knobs_resolve():
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    mesh = SR.abstract_mesh((16, 16), ("data", "model"))
     # kimi-like: experts take model, contraction dim takes data when enabled
     rules = dict(SR.DEFAULT_RULES)
     rules["moe_contract"] = ("data",)
@@ -127,12 +123,8 @@ def test_moe_sharding_knobs_resolve():
     assert spec == jax.sharding.PartitionSpec("model", None, None)
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="known pre-existing jax-0.4.37 break: AbstractMesh((16, 16), names)"
-           " signature mismatch (TypeError in mesh construction); see ROADMAP")
 def test_context_parallel_override():
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    mesh = SR.abstract_mesh((16, 16), ("data", "model"))
     rules = dict(SR.DEFAULT_RULES)
     rules["q_seq"] = ("model",)
     # smollm: 9 heads don't shard -> q_seq takes the model axis

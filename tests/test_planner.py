@@ -18,7 +18,7 @@ import pytest
 
 from repro.core.aggregation import (bucket_size, mixing_matrix, mixing_rows,
                                     padded_rows)
-from repro.core.baselines import AsyDFL
+from repro.core.baselines import AsyDFL, GossipFL
 from repro.core.planner import HorizonPlanner, PlannedRound
 from repro.core.protocol import DySTop, RoundContext
 from repro.core.staleness import StalenessState
@@ -127,6 +127,93 @@ def test_planner_respects_max_round():
     assert len(planner.plan(8, max_round=5)) == 5
     assert planner.t == 5
     assert len(planner.plan(8, max_round=5)) == 0
+
+
+def _failure_planner(seed, *, persist, prob=0.25, n=24, mesh_shards=1):
+    return HorizonPlanner(DySTop(V=10.0, t_thre=6, max_neighbors=4),
+                          tau_bound=5, bandwidth_budget=8.0,
+                          link_timeout_s=5.0, sync_link_timeout_s=30.0,
+                          failure_prob=prob, failure_persist=persist,
+                          mesh_shards=mesh_shards, **_env(n, seed))
+
+
+def test_failure_persist_one_is_monotone():
+    """persist=1.0: a downed worker never recovers — the down mask is
+    monotone non-decreasing round over round."""
+    planner = _failure_planner(seed=1, persist=1.0)
+    prev = np.zeros(24, bool)
+    for _ in range(40):
+        planner.plan(1)
+        assert (prev <= planner.down).all()
+        prev = planner.down.copy()
+    assert prev.any()          # with prob=0.25 over 40 rounds, someone fell
+
+
+def test_failure_persist_zero_never_stays_down():
+    """persist=0.0: every failure lasts exactly one round — no worker is
+    down in two consecutive rounds."""
+    planner = _failure_planner(seed=1, persist=0.0)
+    prev = np.zeros(24, bool)
+    seen_down = False
+    for _ in range(60):
+        planner.plan(1)
+        assert not (prev & planner.down).any()
+        seen_down = seen_down or planner.down.any()
+        prev = planner.down.copy()
+    assert seen_down
+
+
+def test_failure_mask_bit_exact_across_chunking_and_shards():
+    """The failure-mask trajectory is a property of the rng stream alone:
+    one plan(24) call, 24 plan(1) calls, and mesh_shards=2 (dispatch-shape
+    only, no control rng) all yield identical plans and down masks."""
+    whole = _failure_planner(seed=5, persist=0.5).plan(24)
+
+    stepped_pl = _failure_planner(seed=5, persist=0.5)
+    stepped, downs = [], []
+    for _ in range(24):
+        stepped.extend(stepped_pl.plan(1))
+        downs.append(stepped_pl.down.copy())
+
+    sharded_pl = _failure_planner(seed=5, persist=0.5, mesh_shards=2)
+    sharded = sharded_pl.plan(24)
+
+    for variant in (stepped, sharded):
+        for p, q in zip(whole, variant):
+            np.testing.assert_array_equal(p.active, q.active)
+            np.testing.assert_array_equal(p.links, q.links)
+            np.testing.assert_array_equal(p.W, q.W)
+            assert p.duration == q.duration
+            assert p.n_transfers == q.n_transfers
+    np.testing.assert_array_equal(sharded_pl.down, downs[-1])
+
+
+@pytest.mark.parametrize("mech_cls,sync,ceiling", [
+    (lambda: DySTop(V=10.0, t_thre=6, max_neighbors=4), False, 5.0),
+    (lambda: GossipFL(), True, 30.0),
+])
+def test_comm_accounting_and_timeout_ceilings(mech_cls, sync, ceiling):
+    """Per-round durations respect the link-timeout ceilings (async rounds
+    bounded by max h_cmp + link_timeout_s, sync rounds by max h_i +
+    sync_link_timeout_s) and comm_bytes is exactly Σ n_transfers x
+    model_bytes.  Synchrony is a mechanism property: GossipFL pays the
+    sync ceiling, DySTop the async one."""
+    env = _env(24, seed=2)
+    planner = HorizonPlanner(mech_cls(), tau_bound=3, bandwidth_budget=8.0,
+                             link_timeout_s=5.0, sync_link_timeout_s=30.0,
+                             **env)
+    plans = planner.plan(40)
+    h_max = env["h_i"].max()
+    assert all(p.synchronous == sync for p in plans)
+    for p in plans:
+        # async: h_cmp <= h_i elementwise, links capped at link_timeout_s;
+        # sync: full h_i plus links capped at sync_link_timeout_s
+        assert p.duration <= h_max + ceiling + 1e-9
+    assert any(p.n_transfers > 0 for p in plans)
+    assert planner.comm_bytes == pytest.approx(
+        sum(p.n_transfers for p in plans) * env["model_bytes"], rel=0, abs=0)
+    assert planner.sim_clock == pytest.approx(
+        sum(p.duration for p in plans), rel=0, abs=1e-9)
 
 
 def test_planner_replays_failure_dynamics():

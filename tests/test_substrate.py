@@ -117,20 +117,13 @@ def test_checkpoint_roundtrip(tmp_path):
 
 
 def _mesh_16x16():
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    return SR.abstract_mesh((16, 16), ("data", "model"))
 
 
 def _mesh_pod():
-    return jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return SR.abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
-_XFAIL_MESH = pytest.mark.xfail(
-    strict=False,
-    reason="known pre-existing jax-0.4.37 break: AbstractMesh((16, 16), names)"
-           " signature mismatch (TypeError in mesh construction); see ROADMAP")
-
-
-@_XFAIL_MESH
 def test_logical_spec_divisibility_drop():
     mesh = _mesh_16x16()
     # 15 heads don't divide the 16-way model axis -> replicated
@@ -140,7 +133,6 @@ def test_logical_spec_divisibility_drop():
     assert spec == jax.sharding.PartitionSpec("data", "model", None)
 
 
-@_XFAIL_MESH
 def test_logical_spec_no_double_axis():
     mesh = _mesh_16x16()
     # experts take `model`; expert_mlp must NOT reuse it
@@ -153,7 +145,6 @@ def test_logical_spec_no_double_axis():
     assert spec == jax.sharding.PartitionSpec(None, "data", "model")
 
 
-@_XFAIL_MESH
 def test_logical_spec_multi_axis_batch():
     mesh = _mesh_pod()
     spec = SR.logical_spec(("data", None), (256, 4096), mesh)
