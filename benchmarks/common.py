@@ -46,13 +46,16 @@ def run_mech(name: str, *, rounds: int, workers: int, phi: float,
              tau_bound: int = 5, V: float = 10.0, neighbors: Optional[int] = 7,
              t_thre: Optional[int] = None, seed: int = 0,
              target: Optional[float] = None, lr: float = 0.1,
-             sim_time: Optional[float] = None) -> History:
+             sim_time: Optional[float] = None,
+             scenario: Optional[str] = None) -> History:
     """`rounds` caps the round count; if `sim_time` is given, mechanisms are
     compared at equal SIMULATED time (the paper's x-axis) — asynchronous
-    mechanisms then run many more (cheaper) rounds than synchronous ones."""
+    mechanisms then run many more (cheaper) rounds than synchronous ones.
+    `scenario` names a ``core.scenarios`` preset (fault-injection overlay)."""
     cfg = SimConfig(n_workers=workers, n_rounds=rounds, phi=phi,
                     tau_bound=tau_bound, V=V, lr=lr, eval_every=max(rounds // 8, 5),
-                    seed=seed, target_accuracy=target, max_sim_time=sim_time)
+                    seed=seed, target_accuracy=target, max_sim_time=sim_time,
+                    scenario=scenario)
     kw = {}
     if name == "dystop":
         kw = {"V": V, "t_thre": t_thre if t_thre is not None else rounds // 8,

@@ -19,7 +19,7 @@ import time
 
 import jax
 
-from benchmarks import (bound_check, comm_overhead, completion_time,
+from benchmarks import (arena, bound_check, comm_overhead, completion_time,
                         convergence_curves, kernels_bench, lm_fleet,
                         neighbor_sweep, phase_ablation, roofline,
                         round_engine, scenarios, staleness_sweep, v_sweep)
@@ -54,6 +54,10 @@ SUITES = {
     # scenario/fault-plane degradation curves: presets vs the
     # no-staleness-control ablation (ROADMAP item 2)
     "scenarios": lambda q: scenarios.main(rounds=80 if q else 160),
+    # Table-I baseline arena: all five mechanisms head-to-head on the fused
+    # engine, chasing the paper's 51.8%/57.1% headline reductions
+    # (ROADMAP item 2, arena half)
+    "arena": lambda q: arena.quick_main() if q else arena.main(),
     # deliverable (g): roofline table from the dry-run artifacts
     "roofline": lambda q: roofline.main(),
 }

@@ -133,12 +133,40 @@ def chunk_spans(plans: List["PlannedRound"], n_workers: int,
 
 
 class HorizonPlanner:
-    """Replays WAA/PTCA/staleness bookkeeping to produce ``PlannedRound``s.
+    """Replays ``Mechanism`` control-plane bookkeeping to produce
+    ``PlannedRound``s.
 
     Owns ALL mutable control-plane state (staleness, pull counts, readiness
     clocks, failure mask, simulated clock, comm accounting); the simulator
     only reads it back for history records.  ``net`` is duck-typed: anything
     with ``.dist`` and ``.link_rates()`` (see ``dfl.network.EdgeNetwork``).
+
+    The planner drives ANY ``Mechanism`` subclass — DySTop (WAA + PTCA) and
+    every Table-I comparison mechanism (``core.baselines``: MATCHA, AsyDFL,
+    SA-ADFL, GossipFL) — under one rng discipline and one accounting model,
+    which is what makes the baseline arena (``benchmarks/arena.py``)
+    apples-to-apples:
+
+    * rng: per round, the draw order is failure draws → the mechanism's own
+      ``ctx.rng`` draws → channel sampling.  A mechanism may consume any
+      number of draws (MATCHA draws once per matching, GossipFL once per
+      worker, DySTop none) — the stream position after the round is a pure
+      function of the stream before it, so trajectories replay bit-for-bit
+      at any horizon, on any engine, at any shard count.
+    * synchrony: ``RoundDecision.synchronous`` selects the cost model —
+      sync rounds (MATCHA, GossipFL) pay every worker's FULL retrain plus
+      the stall+retry ceiling ``sync_link_timeout_s`` (a barrier cannot
+      abort a pull); async rounds pay only activated workers' compute
+      remainders with the graceful ``link_timeout_s`` abort ceiling.
+    * accounting: Eq. 9 durations, Eq. 10 transfer counts, and
+      ``comm_bytes = Σ n_transfers · model_bytes`` come from the SAME code
+      path for every mechanism — a mechanism only decides ``active`` and
+      ``links``.
+    * dispatch: the model plane chunks plans at ``bucket_key`` changes
+      (``chunk_spans``), so each mechanism flushes at its natural bucket
+      boundaries — all-active sync rounds stay horizon-length at the
+      ``k = N`` bucket, SA-ADFL's varying neighborhood sizes split where
+      the activation-set bucket actually moves.
     """
 
     def __init__(self, mechanism: Mechanism, *, h_i: np.ndarray,
@@ -233,7 +261,8 @@ class HorizonPlanner:
             readiness=h_i - self.time_since_act, in_range=up_range,
             class_counts=self.class_counts, phys_dist=self.net.dist,
             pull_counts=self.pull_counts, staleness=self.st,
-            bandwidth_budget=self.budget, data_sizes=self.data_sizes, rng=rng)
+            bandwidth_budget=self.budget, data_sizes=self.data_sizes, rng=rng,
+            base_in_range=self.in_range)
         dec = self.mechanism.round(ctx)
         if self.failure_prob > 0 or (ov is not None
                                      and ov.forced_down is not None):

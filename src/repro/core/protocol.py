@@ -41,12 +41,21 @@ from repro.core.staleness import StalenessState
 @dataclasses.dataclass
 class RoundContext:
     """Everything the coordinator can see at the start of round t (scalars per
-    worker — it never touches model weights)."""
+    worker — it never touches model weights).
+
+    ``in_range`` is the INSTANTANEOUS link availability: the static geometry
+    masked by this round's down workers and scenario blackout/mobility
+    overlays.  ``base_in_range`` (when the driver provides it) is the static
+    base graph — what mechanisms with one-time structural preprocessing
+    (MATCHA's matching decomposition) must key on, since the masked view
+    varies round to round and run to run.  Decisions are still masked against
+    the instantaneous state by the planner after ``Mechanism.round`` returns.
+    """
     t: int
     round_cost: np.ndarray        # (N,) H_t^i estimate (Eq. 8)
     readiness: np.ndarray         # (N,) h_i - time-since-activation (FIFO order:
                                   #   most negative = finished longest ago)
-    in_range: np.ndarray          # (N, N) bool
+    in_range: np.ndarray          # (N, N) bool (this round, failure-masked)
     class_counts: np.ndarray      # (N, C)
     phys_dist: np.ndarray         # (N, N)
     pull_counts: np.ndarray       # (N, N)
@@ -54,6 +63,7 @@ class RoundContext:
     bandwidth_budget: np.ndarray  # (N,) transfers of size b per round
     data_sizes: np.ndarray        # (N,)
     rng: np.random.Generator
+    base_in_range: Optional[np.ndarray] = None  # (N, N) bool static geometry
 
 
 @dataclasses.dataclass

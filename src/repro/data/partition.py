@@ -1,7 +1,19 @@
 """Dirichlet non-IID partitioner (paper section VI-A2).
 
-phi = 1.0 is treated as IID (per the paper's convention); smaller phi skews
-per-worker class mixtures harder.
+The paper controls statistical heterogeneity with a Dirichlet concentration
+parameter φ: each class's sample mass is split across the N workers by a
+draw from Dirichlet(φ, ..., φ), so smaller φ concentrates a class on fewer
+workers (harder non-IID) and — per the paper's convention — **φ >= 1.0 is
+treated as exactly IID** (every worker gets a uniform 1/N share of every
+class), not as a Dirichlet draw.  φ is the x-axis of the non-IID sweeps and
+the cell axis of ``benchmarks/arena.py`` (``phi1`` = IID, ``phi0.4`` = the
+paper's non-IID comparison setting).
+
+The resulting ``class_counts`` matrix is ALSO control-plane input: PTCA's
+phase-1 priority (Eq. 45/46) ranks neighbors by the EMD between class
+histograms, so the partitioner is where data heterogeneity enters topology
+construction.  ``dirichlet_partition`` is rng-isolated (its own
+``default_rng(seed)``) — it never touches the planner's shared round stream.
 """
 from __future__ import annotations
 
@@ -15,7 +27,26 @@ from repro.data.synthetic import ClassificationData
 def dirichlet_partition(data: ClassificationData, n_workers: int, phi: float,
                         seed: int = 0, min_per_worker: int = 8
                         ) -> Tuple[List[np.ndarray], np.ndarray]:
-    """Returns (per-worker sample index lists, class_counts (N, C))."""
+    """Split ``data`` across ``n_workers`` with Dirichlet(φ) class skew.
+
+    Args:
+      data: the full training set (``data.y`` holds integer class labels).
+      n_workers: fleet size N.
+      phi: Dirichlet concentration; ``phi >= 1.0`` means IID (uniform
+        mixture), smaller values skew per-worker class mixtures harder.
+      seed: partition rng seed — independent of the simulation's round
+        stream, so the same (data, N, φ, seed) always yields the same
+        partition on every engine path.
+      min_per_worker: starved workers are topped up to this many samples
+        (uniformly, with replacement across classes) so every local dataset
+        stays trainable; the top-up counts land in ``class_counts`` too.
+
+    Returns:
+      ``(assignments, class_counts)``: per-worker sample index arrays
+      (int64, into ``data``), and the (N, C) per-worker class histogram in
+      SAMPLES — the input to PTCA's EMD matrix and the ``data_sizes``
+      weighting of the Eq. 4 mixing matrix.
+    """
     rng = np.random.default_rng(seed)
     n_classes = data.n_classes
     idx_by_class = [np.flatnonzero(data.y == c) for c in range(n_classes)]

@@ -1,0 +1,235 @@
+"""Arena contract: every Table-I baseline's planner-driven control plane is
+bit-exact against a hand-rolled sequential ``Mechanism.round`` loop (the
+``tests/test_planner.py`` oracle pattern), with identical comm-bytes
+accounting, and invariant to dispatch shape (``mesh_shards``,
+``scan_horizon``) — the preconditions for ``benchmarks/arena.py`` being an
+apples-to-apples comparison.
+
+Also pins the two control-plane bug-fixes the arena surfaced:
+  * SA-ADFL's singleton drift-plus-penalty activation rotates through the
+    whole fleet (the WAA prefix-scan with max_workers=1 starved everything
+    but the globally cheapest worker);
+  * MATCHA decomposes the STATIC base graph (``ctx.base_in_range``), not the
+    failure-masked instantaneous view, and its cache is identity-keyed.
+"""
+import numpy as np
+import pytest
+
+from repro.core.baselines import (MATCHA, SAADFL, AsyDFL, GossipFL,
+                                  get_mechanism)
+from repro.core.planner import HorizonPlanner
+from repro.core.protocol import DySTop, RoundContext
+from repro.core.staleness import StalenessState
+from repro.dfl.simulator import SimConfig, run_simulation
+from tests.test_planner import _env, _sequential_reference
+
+MECHS = {
+    "matcha": lambda: MATCHA(activation_ratio=0.5, seed=0),
+    "gossipfl": lambda: GossipFL(),
+    "asydfl": lambda: AsyDFL(n_neighbors=3),
+    "sa-adfl": lambda: SAADFL(V=10.0),
+    "dystop": lambda: DySTop(V=10.0, t_thre=6, max_neighbors=4),
+}
+
+
+def _planner(mech, env, **kw):
+    return HorizonPlanner(mech, tau_bound=5, bandwidth_budget=8.0,
+                          link_timeout_s=5.0, sync_link_timeout_s=30.0,
+                          **env, **kw)
+
+
+# --------------------------------------------------------------------------- #
+# planner == sequential oracle, per baseline
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("seed", range(2))
+@pytest.mark.parametrize("name", sorted(MECHS))
+def test_planner_matches_sequential_oracle(name, seed):
+    """H planned rounds == H sequential Mechanism.round calls, exactly —
+    activation sets, links, W rows, durations, staleness counters."""
+    n, horizon = 24, 25
+    planner = _planner(MECHS[name](), _env(n, seed))
+    plans = planner.plan(horizon)
+    ref = _sequential_reference(MECHS[name](), _env(n, seed), n, horizon)
+    assert len(plans) == horizon
+    for p, (dec, W, dur, tau, queue) in zip(plans, ref):
+        np.testing.assert_array_equal(p.active, dec.active)
+        np.testing.assert_array_equal(p.links, dec.links)
+        np.testing.assert_array_equal(p.W, W)
+        assert p.duration == dur
+        assert p.n_transfers == int(dec.links.sum())
+    np.testing.assert_array_equal(planner.st.tau, ref[-1][3])
+    np.testing.assert_array_equal(planner.st.queue, ref[-1][4])
+
+
+@pytest.mark.parametrize("name", ["matcha", "gossipfl", "sa-adfl"])
+def test_planner_matches_sequential_oracle_under_failures(name):
+    """Same pin with worker churn on: the failure draws precede each
+    mechanism's own ctx.rng draws, and MATCHA must key its decomposition on
+    the static base graph, not round 1's masked view."""
+    n, horizon = 24, 20
+    planner = _planner(MECHS[name](), _env(n, 4), failure_prob=0.2,
+                       failure_persist=0.5)
+    plans = planner.plan(horizon)
+    ref = _sequential_reference(MECHS[name](), _env(n, 4), n, horizon,
+                                failure_prob=0.2, failure_persist=0.5)
+    for p, (dec, W, dur, _, _) in zip(plans, ref):
+        np.testing.assert_array_equal(p.active, dec.active)
+        np.testing.assert_array_equal(p.links, dec.links)
+        assert p.duration == dur
+
+
+# --------------------------------------------------------------------------- #
+# accounting + dispatch-shape invariance
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("name", sorted(MECHS))
+def test_comm_bytes_is_transfers_times_model_bytes(name):
+    """Eq. 10 accounting is mechanism-independent:
+    comm_bytes == Σ n_transfers × model_bytes, exactly."""
+    env = _env(24, seed=2)
+    planner = _planner(MECHS[name](), env)
+    plans = planner.plan(30)
+    assert any(p.n_transfers > 0 for p in plans)
+    assert planner.comm_bytes == pytest.approx(
+        sum(p.n_transfers for p in plans) * env["model_bytes"], rel=0, abs=0)
+
+
+@pytest.mark.parametrize("name", sorted(MECHS))
+def test_mesh_shards_does_not_change_plans(name):
+    """mesh_shards is dispatch shape only — the control plane (and so the
+    whole arena trajectory) is identical at any shard count."""
+    a = _planner(MECHS[name](), _env(24, 5)).plan(20)
+    b = _planner(MECHS[name](), _env(24, 5), mesh_shards=2).plan(20)
+    for p, q in zip(a, b):
+        np.testing.assert_array_equal(p.active, q.active)
+        np.testing.assert_array_equal(p.links, q.links)
+        np.testing.assert_array_equal(p.W, q.W)
+        assert p.duration == q.duration
+
+
+_HISTORY_FIELDS = ("rounds", "sim_time", "comm_gb", "acc_global",
+                   "staleness_avg", "staleness_max", "round_durations",
+                   "round_active")
+
+
+@pytest.mark.parametrize("name", ["matcha", "gossipfl", "asydfl", "sa-adfl"])
+def test_scan_horizon_invariance_per_baseline(name):
+    """run_simulation histories (control plane AND learning curves) are
+    bit-identical at scan_horizon 1 vs 8 for every baseline — the fused
+    mega-round path flushes each mechanism at its natural bucket
+    boundaries without changing the trajectory."""
+    cfg = dict(n_workers=16, n_rounds=24, phi=0.5, lr=0.1, eval_every=8,
+               seed=0, hidden=48, n_samples=6000)
+    h1 = run_simulation(MECHS[name](), SimConfig(scan_horizon=1, **cfg))
+    h8 = run_simulation(MECHS[name](), SimConfig(scan_horizon=8, **cfg))
+    for f in _HISTORY_FIELDS:
+        assert getattr(h1, f) == getattr(h8, f), f
+
+
+# --------------------------------------------------------------------------- #
+# SA-ADFL: singleton drift-plus-penalty activation rotates the fleet
+# --------------------------------------------------------------------------- #
+
+
+def _ctx(env, n, *, t=1, tau=None, queue=None, in_range=None,
+         base_in_range=None, cost=None):
+    st = StalenessState.create(n, 5)
+    if tau is not None:
+        st.tau = np.asarray(tau, np.float64)
+    if queue is not None:
+        st.queue = np.asarray(queue, np.float64)
+    return RoundContext(
+        t=t, round_cost=(env["h_i"] if cost is None else cost),
+        readiness=env["h_i"],
+        in_range=(env["in_range"] if in_range is None else in_range),
+        class_counts=env["class_counts"], phys_dist=env["net"].dist,
+        pull_counts=np.zeros((n, n)), staleness=st,
+        bandwidth_budget=np.full(n, 8.0), data_sizes=env["data_sizes"],
+        rng=np.random.default_rng(0), base_in_range=base_in_range)
+
+
+def test_saadfl_picks_max_staleness_pressure():
+    """The activated worker maximizes q·(τ+1) − V·cost (Eq. 34 restricted
+    to singletons) — NOT simply the cheapest worker."""
+    n = 8
+    env = _env(n, seed=0)
+    cost = np.arange(1.0, n + 1.0)          # worker 0 is cheapest
+    queue = np.zeros(n)
+    queue[5] = 100.0                        # worker 5 is badly starved
+    tau = np.zeros(n)
+    tau[5] = 9.0
+    dec = SAADFL(V=10.0).round(_ctx(env, n, queue=queue, tau=tau, cost=cost))
+    assert dec.active[5]
+    # and with no queue pressure, cost decides
+    dec = SAADFL(V=10.0).round(_ctx(env, n, cost=cost))
+    assert dec.active[0]
+    # receivers mix AND train: mix rows == active rows
+    np.testing.assert_array_equal(dec.active, dec.active | dec.links.any(1))
+
+
+def test_saadfl_activation_covers_the_whole_fleet():
+    """Regression for the WAA-prefix-scan bug: over a few hundred rounds
+    EVERY worker must activate (queue growth forces rotation), and staleness
+    stays bounded.  The old argmin-cost rule left workers permanently
+    stale (τ growing without bound) whenever the cheap workers' neighborhoods
+    didn't cover them."""
+    n = 16
+    planner = _planner(SAADFL(V=10.0), _env(n, seed=1))
+    ever_active = np.zeros(n, bool)
+    max_tau = 0.0
+    for _ in range(300):
+        (p,) = planner.plan(1)
+        ever_active |= p.active
+        max_tau = max(max_tau, planner.st.tau.max())
+    assert ever_active.all()
+    assert max_tau < 100
+
+
+# --------------------------------------------------------------------------- #
+# MATCHA: base-graph decomposition + identity-keyed cache
+# --------------------------------------------------------------------------- #
+
+
+def test_matcha_decomposes_base_graph_not_masked_view():
+    n = 16
+    env = _env(n, seed=3)
+    base = env["in_range"]
+    masked = base.copy()
+    masked[0, :] = masked[:, 0] = False      # worker 0 down this round
+    m = MATCHA(activation_ratio=1.0, seed=0)
+    dec = m.round(_ctx(env, n, in_range=masked, base_in_range=base))
+    union = np.zeros_like(base)
+    for mat in m._matchings:
+        union |= mat
+    # the decomposition covers the FULL base graph, including worker 0's
+    # edges (the planner masks the decision against down workers afterwards)
+    np.testing.assert_array_equal(union, base)
+    np.testing.assert_array_equal(dec.links, union)
+
+
+def test_matcha_cache_rederives_on_new_environment():
+    n = 16
+    m = MECHS["matcha"]()
+    env_a, env_b = _env(n, seed=3), _env(n, seed=7)
+    m.round(_ctx(env_a, n, base_in_range=env_a["in_range"]))
+    first = m._matchings
+    # same graph object -> cache hit (identity-keyed, no re-derivation)
+    m.round(_ctx(env_a, n, base_in_range=env_a["in_range"]))
+    assert m._matchings is first
+    # different environment -> re-derive against the new geometry
+    m.round(_ctx(env_b, n, base_in_range=env_b["in_range"]))
+    union = np.zeros_like(env_b["in_range"])
+    for mat in m._matchings:
+        union |= mat
+    np.testing.assert_array_equal(union, env_b["in_range"])
+
+
+def test_get_mechanism_table():
+    for name, cls in [("dystop", DySTop), ("matcha", MATCHA),
+                      ("gossipfl", GossipFL), ("asydfl", AsyDFL),
+                      ("sa-adfl", SAADFL)]:
+        assert isinstance(get_mechanism(name), cls)
+    assert get_mechanism("asydfl", n_neighbors=2).s == 2

@@ -70,7 +70,8 @@ def _sequential_reference(mechanism, env, n, horizon, *, tau_bound=5,
             readiness=env["h_i"] - time_since_act, in_range=up_range,
             class_counts=env["class_counts"], phys_dist=env["net"].dist,
             pull_counts=pull_counts, staleness=st, bandwidth_budget=budget,
-            data_sizes=env["data_sizes"], rng=rng)
+            data_sizes=env["data_sizes"], rng=rng,
+            base_in_range=env["in_range"])
         dec = mechanism.round(ctx)
         if failure_prob > 0:
             dec.active = dec.active & ~down
