@@ -22,7 +22,8 @@ import jax
 from benchmarks import (arena, bound_check, comm_overhead, completion_time,
                         convergence_curves, kernels_bench, lm_fleet,
                         neighbor_sweep, phase_ablation, roofline,
-                        round_engine, scenarios, staleness_sweep, v_sweep)
+                        round_engine, scenarios, serving, staleness_sweep,
+                        v_sweep)
 from benchmarks.common import header, records
 
 SUITES = {
@@ -58,6 +59,10 @@ SUITES = {
     # engine, chasing the paper's 51.8%/57.1% headline reductions
     # (ROADMAP item 2, arena half)
     "arena": lambda q: arena.quick_main() if q else arena.main(),
+    # traffic plane: the continuous-batching serving engine under each
+    # arrival preset (tokens/sec, p50/p99 TTFT + per-token latency,
+    # slot occupancy) — ROADMAP item 1, federation-to-serving pipeline
+    "serving": lambda q: serving.main(quick=q),
     # deliverable (g): roofline table from the dry-run artifacts
     "roofline": lambda q: roofline.main(),
 }

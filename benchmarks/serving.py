@@ -1,0 +1,88 @@
+"""Serving under load: the traffic plane against the continuous-batching
+engine, one row group per arrival preset.
+
+Each preset in ``serving.traffic.ARRIVAL_PRESETS`` (steady Poisson, bursty
+on/off Poisson, replayed ramp trace) drives a fresh :class:`ServeEngine`
+(smollm-135m smoke geometry) on the WALL clock: requests really arrive over
+time, slot-claiming prefill interleaves with decode bursts, and idle gaps
+really wait.  Per preset we report
+
+* ``tokens_per_sec`` — generated tokens / makespan (value column is the
+  inverse, us per generated token, to keep the us_per_call convention),
+* ``ttft`` — p50 time-to-first-token in us (p99 in derived),
+* ``tok_latency`` — p50 per-generated-token decode latency in us (p99 in
+  derived),
+* ``occupancy`` — mean busy-slot fraction across engine ticks (value
+  column; peak in derived; NOT a latency).
+
+Quick mode shrinks the request count and compresses arrival gaps but emits
+the SAME row names, so the CI structural diff against the committed
+``BENCH_serving.json`` catches a preset or metric going dark.
+
+    PYTHONPATH=src python -m benchmarks.serving
+    PYTHONPATH=src python -m benchmarks.run --only serving --quick
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.models import registry as R
+from repro.serving import (ARRIVAL_PRESETS, GenerationConfig, ServeEngine,
+                           drive, generate_requests)
+
+from benchmarks.common import emit
+
+
+def _engine(cfg, params, slots: int, max_len: int) -> ServeEngine:
+    eng = ServeEngine(cfg, params, batch_slots=slots, max_len=max_len, seed=0)
+    # pay the one-time jit compile outside the measured window
+    eng.submit(np.arange(1, 5, dtype=np.int32),
+               GenerationConfig(max_new_tokens=2))
+    eng.run()
+    eng.finished.clear()
+    eng.stats.clear()
+    return eng
+
+
+def main(quick: bool = False, arch: str = "smollm-135m",
+         slots: int = 4, max_len: int = 96) -> None:
+    cfg = R.get_smoke_config(arch)
+    params, _ = R.init_params(cfg, jax.random.PRNGKey(0))
+    for name, preset in ARRIVAL_PRESETS.items():
+        tc = preset
+        if quick:
+            # same distributions, same row names — just less of it, arriving
+            # faster, so the smoke stays in CI's time budget
+            tc = dataclasses.replace(
+                preset, n_requests=8,
+                rate=preset.rate * 4, base_rate=preset.base_rate * 4,
+                burst_rate=preset.burst_rate * 4,
+                burst_period_s=preset.burst_period_s / 4,
+                trace=(tuple(t / 4 for t in preset.trace)
+                       if preset.trace else None))
+        reqs = generate_requests(tc, cfg.vocab_size)
+        eng = _engine(cfg, params, slots, max_len)
+        rep = drive(eng, reqs)
+        assert rep.n_finished == rep.n_requests, \
+            f"{name}: {rep.n_finished}/{rep.n_requests} finished"
+        emit(f"serving/{name}/tokens_per_sec", 1e6 / rep.tokens_per_sec,
+             f"{rep.tokens_per_sec:.1f} tok/s over {rep.total_tokens} tokens,"
+             f" {rep.n_requests} reqs, {slots} slots ({arch} smoke)")
+        emit(f"serving/{name}/ttft", rep.ttft_s["p50"] * 1e6,
+             f"time-to-first-token p50={rep.ttft_s['p50']*1e3:.1f}ms "
+             f"p99={rep.ttft_s['p99']*1e3:.1f}ms")
+        emit(f"serving/{name}/tok_latency", rep.tok_latency_s["p50"] * 1e6,
+             f"per-token decode latency p50={rep.tok_latency_s['p50']*1e3:.1f}ms "
+             f"p99={rep.tok_latency_s['p99']*1e3:.1f}ms")
+        emit(f"serving/{name}/occupancy", rep.occupancy["mean"],
+             f"mean busy-slot fraction (peak={rep.occupancy['peak']:.2f}); "
+             f"unitless, not a latency")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    main()

@@ -765,6 +765,7 @@ def run_lm_federation(mechanism, cfg: ModelConfig, run: LMRunConfig,
             "config": {"plane": "lm", "n_workers": n, "seed": run.seed,
                        "resident_fleet": run.resident_fleet,
                        "mesh_shards": run.mesh_shards,
+                       "arch": cfg.arch_id, "optimizer": run.optimizer,
                        "scenario": scen.schedule.name if scen else None},
         }
         CIO.save_checkpoint(CIO.checkpoint_path(run.checkpoint_dir, t),

@@ -133,6 +133,17 @@ class SimConfig:
                                       #   bit-identical at any shard count;
                                       #   learning curves agree to f32
                                       #   reduction-order tolerance
+    min_bucket: int = 8               # fused engine: smallest power-of-two
+                                      #   shape bucket for gathered-row /
+                                      #   column-union padding (the per-plane
+                                      #   knob — the LM plane's small fleets
+                                      #   default to LMRunConfig.min_bucket=2;
+                                      #   the big sim fleets keep 8 so compile
+                                      #   count stays O(log N)).  Any value
+                                      #   yields bit-identical trajectories —
+                                      #   bucket padding only adds zero-weight
+                                      #   rows/columns — it trades compiled
+                                      #   shape count against wasted row slots
     n_samples: int = 20000
     dim: int = 32
     scenario: Optional[object] = None # fault-injection plane (core.scenarios):
@@ -167,7 +178,7 @@ class SimConfig:
                                  f"non-positive value makes Eq. 7-9 round "
                                  f"durations meaningless")
         for f in ("n_workers", "n_rounds", "batch_size", "local_steps",
-                  "eval_every", "scan_horizon", "mesh_shards"):
+                  "eval_every", "scan_horizon", "mesh_shards", "min_bucket"):
             v = getattr(self, f)
             if v < 1:
                 raise ValueError(f"SimConfig.{f} must be >= 1, got {v}")
@@ -414,12 +425,14 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
             n_rows = cfg.n_workers + (shd.pad(cfg.n_workers) if shd else 0)
             for lo, hi, key in chunk_spans(plans, cfg.n_workers,
                                            col_sparse=cfg.col_sparse_mix,
+                                           min_bucket=cfg.min_bucket,
                                            mesh_shards=cfg.mesh_shards):
                 chunk = plans[lo:hi]
                 col = use_cols(key)
                 if len(chunk) > 1:
                     w_rows_h, ctrl_h, ts = WK.pack_horizon(
-                        chunk, col_sparse=col, shards=cfg.mesh_shards)
+                        chunk, min_bucket=cfg.min_bucket, col_sparse=col,
+                        shards=cfg.mesh_shards)
                     if not col:
                         w_rows_h = WK.pad_w_cols(w_rows_h, n_rows)
                     buf, _ = WK.mega_round_step(
@@ -442,13 +455,15 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
                 if col:
                     w_rows, mix_ids, col_ids = mixing_rows_cols(
                         p.W, p.active, p.links, cols_mask=p.mix_cols,
-                        shards=cfg.mesh_shards)
+                        min_bucket=cfg.min_bucket, shards=cfg.mesh_shards)
                 else:
                     w_rows, mix_ids = mixing_rows(p.W, p.active, p.links,
+                                                  min_bucket=cfg.min_bucket,
                                                   shards=cfg.mesh_shards)
                     w_rows = WK.pad_w_cols(w_rows, n_rows)
                     col_ids = None
                 train_ids, train_mask = padded_rows(p.active,
+                                                    min_bucket=cfg.min_bucket,
                                                     shards=cfg.mesh_shards)
                 ctrl = WK.pack_round_ctrl(mix_ids, train_ids, train_mask,
                                           col_ids=col_ids)

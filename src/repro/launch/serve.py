@@ -2,6 +2,13 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke \
         --batch 4 --prompt-len 32 --gen 32
+
+With ``--from-ckpt`` the params come from a fleet checkpoint written by
+``run_lm_federation`` instead of a fresh init — the Eq. 11 weighted global
+model by default, or one worker's own model with ``--worker i``:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
+        --from-ckpt ckpts/ckpt_round000010.npz --batch 4 --gen 32
 """
 from __future__ import annotations
 
@@ -20,10 +27,18 @@ from repro.models import encdec as E
 
 
 def serve(arch: str, smoke: bool, batch: int, prompt_len: int, gen: int,
-          max_len: int = 512):
+          max_len: int = 512, from_ckpt: str | None = None,
+          worker: int | None = None):
     cfg = R.get_smoke_config(arch) if smoke else R.get_config(arch)
     key = jax.random.PRNGKey(0)
-    params, _ = R.init_params(cfg, key)
+    if from_ckpt is not None:
+        from repro.serving.bridge import serving_params_from_checkpoint
+        params = serving_params_from_checkpoint(from_ckpt, cfg, worker=worker)
+        src = f"ckpt={from_ckpt}" + ("" if worker is None
+                                     else f" worker={worker}")
+        print(f"loaded serving params from {src}")
+    else:
+        params, _ = R.init_params(cfg, key)
     shape = ShapeSpec("serve", max_len, batch, "decode")
     cache = R.init_decode_cache(cfg, shape)
 
@@ -70,8 +85,14 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--from-ckpt", default=None,
+                    help="fleet checkpoint (.npz) to serve from; default is "
+                         "the Eq. 11 weighted global model")
+    ap.add_argument("--worker", type=int, default=None,
+                    help="serve worker i's own model instead of the global")
     args = ap.parse_args()
-    serve(args.arch, args.smoke, args.batch, args.prompt_len, args.gen)
+    serve(args.arch, args.smoke, args.batch, args.prompt_len, args.gen,
+          from_ckpt=args.from_ckpt, worker=args.worker)
 
 
 if __name__ == "__main__":

@@ -1,3 +1,12 @@
-from repro.serving.engine import GenerationConfig, ServeEngine
+from repro.serving.engine import GenerationConfig, RequestStats, ServeEngine
+from repro.serving.bridge import (engine_from_checkpoint,
+                                  serving_params_from_checkpoint)
+from repro.serving.traffic import (ARRIVAL_PRESETS, Request, TrafficConfig,
+                                   TrafficReport, drive, generate_requests)
 
-__all__ = ["ServeEngine", "GenerationConfig"]
+__all__ = [
+    "ServeEngine", "GenerationConfig", "RequestStats",
+    "engine_from_checkpoint", "serving_params_from_checkpoint",
+    "ARRIVAL_PRESETS", "Request", "TrafficConfig", "TrafficReport",
+    "drive", "generate_requests",
+]

@@ -1,0 +1,110 @@
+"""Checkpoint -> serving bridge: put a trained fleet in front of traffic.
+
+``run_lm_federation`` snapshots the whole resident fleet as flat ``(N, P)``
+f32 buffers (``params|pbuf`` / ``params|obuf`` inside the npz written by
+``checkpoint/io.py``).  This module turns those buffers back into serving
+params for :class:`ServeEngine`:
+
+* the **Eq. 11 global model** — ``alpha @ pbuf`` via
+  ``flat_state.weighted_row`` (uniform alpha by default, matching the
+  federation's uniform data sizes), or
+* **any single worker row** — ``pbuf[worker]``,
+
+then ``flat_state.unravel_row`` casts every leaf back to the model's spec
+dtypes.  The f32 residency buffer stores bf16 and int32 leaves losslessly
+(both embed exactly in f32's 24-bit mantissa), so worker-row extraction is
+BITWISE — pinned by ``tests/test_serving.py``.
+
+The FlatSpec is reconstructed from the arch's ``init_params`` shapes via
+``jax.eval_shape`` (no parameter allocation), and validated against the
+checkpoint: the stored ``arch`` id (if the snapshot recorded one) and the
+flat width P must both match, so loading a checkpoint with the wrong config
+fails loudly instead of mis-slicing the buffer.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dfl import flat_state as FS
+from repro.models import registry as R
+from repro.serving.engine import ServeEngine
+
+Params = Dict[str, Any]
+
+
+def fleet_spec_for(cfg: ModelConfig) -> FS.FlatSpec:
+    """FlatSpec of a 1-worker stacked params pytree for ``cfg``, built from
+    abstract shapes only (no weight allocation)."""
+    shapes = jax.eval_shape(lambda k: R.init_params(cfg, k)[0],
+                            jax.random.PRNGKey(0))
+    stacked = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((1,) + l.shape, l.dtype), shapes)
+    return FS.spec_of(stacked)
+
+
+def load_fleet_checkpoint(path: str | pathlib.Path
+                          ) -> Tuple[np.ndarray, np.ndarray, Dict[str, Any]]:
+    """Read a fleet snapshot -> (pbuf (N, P), obuf (N, S), extra metadata)."""
+    with np.load(path, allow_pickle=False) as z:
+        if "params|pbuf" not in z.files:
+            raise KeyError(f"{path}: not a fleet checkpoint "
+                           f"(missing params|pbuf; keys={z.files[:5]}...)")
+        pbuf = z["params|pbuf"]
+        obuf = z["params|obuf"]
+        meta = json.loads(str(z["__meta__"]))
+    return pbuf, obuf, meta.get("extra", {})
+
+
+def serving_params_from_checkpoint(
+        path: str | pathlib.Path, cfg: ModelConfig,
+        worker: Optional[int] = None,
+        alpha: Optional[np.ndarray] = None) -> Params:
+    """Materialize serving params from a fleet checkpoint.
+
+    ``worker=None`` (default) yields the Eq. 11 weighted global model with
+    ``alpha`` weights (uniform if omitted); ``worker=i`` yields worker i's
+    own model, bitwise-identical to its training-time params.
+    """
+    pbuf, _, extra = load_fleet_checkpoint(path)
+    ck_arch = (extra.get("config") or {}).get("arch")
+    if ck_arch is not None and ck_arch != cfg.arch_id:
+        raise ValueError(f"checkpoint was trained on arch {ck_arch!r}, "
+                         f"got cfg for {cfg.arch_id!r}")
+    spec = fleet_spec_for(cfg)
+    n, p = pbuf.shape
+    if p != spec.n_params:
+        raise ValueError(f"checkpoint flat width P={p} does not match "
+                         f"{cfg.arch_id} ({spec.n_params} params) — wrong "
+                         f"config geometry for this snapshot")
+    buf = jnp.asarray(pbuf)
+    if worker is not None:
+        if not (0 <= worker < n):
+            raise ValueError(f"worker {worker} out of range for fleet N={n}")
+        row = buf[worker]
+    else:
+        if alpha is None:
+            alpha = np.full((n,), 1.0 / n, np.float32)
+        alpha = jnp.asarray(alpha, jnp.float32)
+        if alpha.shape != (n,):
+            raise ValueError(f"alpha must be shape ({n},), got {alpha.shape}")
+        row = FS.weighted_row(buf, alpha)
+    return FS.unravel_row(row, spec)
+
+
+def engine_from_checkpoint(path: str | pathlib.Path, cfg: ModelConfig,
+                           worker: Optional[int] = None,
+                           alpha: Optional[np.ndarray] = None,
+                           batch_slots: int = 4, max_len: int = 512,
+                           seed: int = 0) -> ServeEngine:
+    """One-call checkpoint -> hot serving engine."""
+    params = serving_params_from_checkpoint(path, cfg, worker=worker,
+                                            alpha=alpha)
+    return ServeEngine(cfg, params, batch_slots=batch_slots, max_len=max_len,
+                       seed=seed)

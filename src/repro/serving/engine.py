@@ -1,10 +1,22 @@
-"""Batched serving engine over the production decode step.
+"""Slot-based continuous-batching serving engine over the production decode
+step.
 
-Slot-based continuous batching: a fixed batch of decode slots; finished
-requests free their slot and queued requests claim it (their prompt is
-prefilled into that slot's cache rows while other slots keep decoding —
-emulated here step-locked, which is what a TPU serving binary does between
-decode bursts).  Sampling: greedy / temperature / top-k / nucleus.
+A fixed batch of decode slots shares ONE jitted, vmapped decode dispatch;
+every slot carries its own position clock, KV/state cache rows, sampling key,
+and ``GenerationConfig``.  Each engine tick consumes one token per occupied
+slot: slots still inside their prompt consume the next PROMPT token
+(incremental slot-claiming prefill), slots past it consume their previously
+sampled token (decode) — so a request admitted mid-flight prefills inside the
+same batched steps that keep every other slot decoding.  Finished requests
+free their slot and queued requests claim it FIFO, immediately.
+
+Per-slot isolation is exact: a slot's logits depend only on its own tokens
+and positions (rows never attend across the batch, prompts are never padded
+into a shared prefill, and sampling keys derive from the request id), so a
+request's output stream is bit-independent of what else is in flight and of
+the slot count — the property the traffic-plane determinism tests pin.
+
+Sampling: greedy / temperature / top-k / nucleus (``sample_token``).
 
 Works with every decoder-only zoo arch; enc-dec serving goes through
 ``models.encdec`` directly (cross-caches are per-request state).
@@ -12,7 +24,8 @@ Works with every decoder-only zoo arch; enc-dec serving goes through
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+import functools
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +33,6 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.models import registry as R
-from repro.models import transformer as T
 
 Params = Dict[str, Any]
 
@@ -33,34 +45,137 @@ class GenerationConfig:
     top_p: Optional[float] = None
     eos_id: Optional[int] = None
 
+    def __post_init__(self):
+        if self.max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got "
+                             f"{self.max_new_tokens}")
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, got "
+                             f"{self.temperature}")
+        if self.top_k is not None and self.top_k < 1:
+            raise ValueError(f"top_k must be >= 1 (or None), got {self.top_k}")
+        if self.top_p is not None and not (0.0 < self.top_p <= 1.0):
+            raise ValueError(f"top_p must be in (0, 1] (or None), got "
+                             f"{self.top_p}")
+
+
+@dataclasses.dataclass
+class RequestStats:
+    """Per-request lifecycle in engine TICKS (one tick = one batched decode
+    dispatch).  The traffic driver maps ticks to wall/virtual seconds."""
+    rid: int
+    prompt_len: int
+    max_new_tokens: int
+    submit_step: int
+    admit_step: int = -1
+    first_token_step: int = -1
+    finish_step: int = -1
+    n_generated: int = 0
+
 
 @dataclasses.dataclass
 class _Slot:
     request_id: Optional[int] = None
+    gen: GenerationConfig = dataclasses.field(default_factory=GenerationConfig)
+    prompt: Optional[np.ndarray] = None
+    n_fed: int = 0                      # prompt tokens consumed so far
     tokens_out: List[int] = dataclasses.field(default_factory=list)
     remaining: int = 0
     last_token: int = 0
+    key: Optional[jnp.ndarray] = None   # per-request sampling key chain
 
 
 def sample_token(logits: jnp.ndarray, key, gen: GenerationConfig) -> jnp.ndarray:
-    """logits (B, V) -> (B,) int32."""
+    """logits (B, V) -> (B,) int32.
+
+    Edge cases are pinned by tests/test_serving.py: ``top_k=1`` is greedy at
+    any temperature, ``top_k >= V`` and ``top_p=1.0`` are exact no-ops (the
+    filtered logits are bit-identical to the unfiltered ones, so the sampled
+    stream matches plain temperature sampling draw-for-draw), and top-k
+    composes with top-p (nucleus mass is computed over the k survivors).
+    """
     if gen.temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / gen.temperature
+    V = logits.shape[-1]
     if gen.top_k is not None:
-        kth = jnp.sort(logits, axis=-1)[:, -gen.top_k][:, None]
+        k = min(int(gen.top_k), V)      # top_k >= vocab: keep everything
+        kth = jnp.sort(logits, axis=-1)[:, V - k][:, None]
         logits = jnp.where(logits < kth, -1e30, logits)
     if gen.top_p is not None:
         sorted_l = jnp.sort(logits, axis=-1)[:, ::-1]
         probs = jax.nn.softmax(sorted_l, axis=-1)
         cum = jnp.cumsum(probs, axis=-1)
-        cutoff_idx = jnp.sum(cum < gen.top_p, axis=-1)
+        # smallest prefix with mass >= top_p; clamp guards the float-rounding
+        # case where cum never reaches 1.0 (top_p=1.0 must keep every token
+        # rather than index past the vocab end)
+        cutoff_idx = jnp.minimum(jnp.sum(cum < gen.top_p, axis=-1), V - 1)
         cutoff = jnp.take_along_axis(sorted_l, cutoff_idx[:, None], axis=-1)
         logits = jnp.where(logits < cutoff, -1e30, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
 
 
+def _strip_batch(cache: Params) -> Tuple[Params, Params, Params]:
+    """Split a batched decode cache into (rows-tree, in/out vmap axes tree,
+    fresh-row template is built separately).  The batch axis is leading for
+    ``prelude``/``coda`` layer caches and SECOND for ``blocks`` (which stack
+    a leading layer-group axis for the ``lax.scan`` body)."""
+    rows = {"prelude": cache["prelude"], "coda": cache["coda"],
+            "blocks": cache["blocks"]}
+    axes = {"prelude": jax.tree.map(lambda _: 0, cache["prelude"]),
+            "coda": jax.tree.map(lambda _: 0, cache["coda"]),
+            "blocks": (jax.tree.map(lambda _: 1, cache["blocks"])
+                       if cache["blocks"] is not None else None)}
+    return rows, axes
+
+
+@functools.lru_cache(maxsize=None)
+def _vstep_for(cfg: ModelConfig, axes_key: Tuple) -> Any:
+    """One jitted vmapped row-step per (cfg, cache-structure) pair.
+
+    The row function runs the production ``serve_step`` at batch 1 with the
+    slot's OWN position clock; ``jax.vmap`` batches the rows back together so
+    the whole engine still pays one fused dispatch per tick.  ``pos`` and the
+    cache are donated: the engine threads them through every tick.
+    """
+    axes = _unfreeze(axes_key)
+
+    def one(params, pos, cache_row, tok):
+        cache = {
+            "pos": pos,
+            "prelude": jax.tree.map(lambda l: l[None], cache_row["prelude"]),
+            "coda": jax.tree.map(lambda l: l[None], cache_row["coda"]),
+            "blocks": (jax.tree.map(lambda l: l[:, None],
+                                    cache_row["blocks"])
+                       if cache_row["blocks"] is not None else None),
+        }
+        logits, new = R.serve_step(cfg, params, cache, tok[None, None])
+        row = {
+            "prelude": jax.tree.map(lambda l: l[0], new["prelude"]),
+            "coda": jax.tree.map(lambda l: l[0], new["coda"]),
+            "blocks": (jax.tree.map(lambda l: l[:, 0], new["blocks"])
+                       if new["blocks"] is not None else None),
+        }
+        return logits[0, -1].astype(jnp.float32), new["pos"], row
+
+    vstep = jax.vmap(one, in_axes=(None, 0, axes, 0), out_axes=(0, 0, axes))
+    return jax.jit(vstep, donate_argnums=(1, 2))
+
+
+def _freeze(tree) -> Tuple:
+    """Hashable snapshot of an axes pytree (for the lru_cache key)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    return (tuple(leaves), treedef)
+
+
+def _unfreeze(key: Tuple):
+    return jax.tree.unflatten(key[1], list(key[0]))
+
+
 class ServeEngine:
+    """See module docstring.  Construction compiles nothing; the first tick
+    pays the one (cfg, slot-count) jit compile."""
+
     def __init__(self, cfg: ModelConfig, params: Params, batch_slots: int = 4,
                  max_len: int = 512, seed: int = 0):
         if R.is_encdec(cfg):
@@ -69,90 +184,146 @@ class ServeEngine:
         self.params = params
         self.B = batch_slots
         self.max_len = max_len
-        self.key = jax.random.PRNGKey(seed)
-        self.cache = R.init_decode_cache(cfg, ShapeSpec("serve", max_len,
-                                                        batch_slots, "decode"))
+        self.base_key = jax.random.PRNGKey(seed)
+        full = R.init_decode_cache(cfg, ShapeSpec("serve", max_len,
+                                                  batch_slots, "decode"))
+        self.cache, axes = _strip_batch(full)
+        self.pos = jnp.zeros((batch_slots,), jnp.int32)
+        # one fresh single-row cache, scattered into a slot at admission:
+        # attention rows are self-masking (k_pos > pos excludes stale
+        # entries) but recurrent ssm/rglru state must be zeroed per request
+        fresh = R.init_decode_cache(cfg, ShapeSpec("serve", max_len, 1,
+                                                   "decode"))
+        self._fresh_row, _ = _strip_batch(fresh)
+        self._vstep = _vstep_for(cfg, _freeze(axes))
         self.slots = [_Slot() for _ in range(batch_slots)]
         self.queue: List[Tuple[int, np.ndarray, GenerationConfig]] = []
         self.finished: Dict[int, List[int]] = {}
+        self.stats: Dict[int, RequestStats] = {}
+        self.t = 0                       # global tick counter
         self._next_id = 0
-        self._step = jax.jit(lambda p, c, t: R.serve_step(cfg, p, c, t))
-        self._prefill = jax.jit(lambda p, c, t: T.prefill_cache(cfg, p, c, t))
 
     # ------------------------------------------------------------------ API
 
     def submit(self, prompt: np.ndarray, gen: GenerationConfig) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim != 1 or len(prompt) == 0:
+            raise ValueError("prompt must be a non-empty 1-D token array")
+        if len(prompt) + gen.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens "
+                f"({gen.max_new_tokens}) exceeds max_len ({self.max_len})")
         rid = self._next_id
         self._next_id += 1
-        self.queue.append((rid, np.asarray(prompt, np.int32), gen))
+        self.queue.append((rid, prompt, gen))
+        self.stats[rid] = RequestStats(rid=rid, prompt_len=len(prompt),
+                                       max_new_tokens=gen.max_new_tokens,
+                                       submit_step=self.t)
         return rid
 
-    def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+    @property
+    def n_active(self) -> int:
+        return sum(s.request_id is not None for s in self.slots)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or self.n_active > 0
+
+    def step(self) -> Dict[str, List[int]]:
+        """One engine tick: admit, dispatch one batched token step, sample.
+
+        Returns the tick's lifecycle events (request ids):
+        ``admitted`` — claimed a free slot this tick; ``first_token`` —
+        produced their first generated token; ``finished`` — completed (their
+        output is now in ``self.finished``).  A tick with no occupied slot is
+        a no-op and does not advance the clock.
+        """
+        events: Dict[str, List[int]] = {"admitted": [], "first_token": [],
+                                        "finished": []}
+        self._admit(events["admitted"])
+        active = [i for i, s in enumerate(self.slots)
+                  if s.request_id is not None]
+        if not active:
+            return events
+        toks = np.zeros((self.B,), np.int32)
+        for i in active:
+            s = self.slots[i]
+            toks[i] = (s.prompt[s.n_fed] if s.n_fed < len(s.prompt)
+                       else s.last_token)
+        logits, self.pos, self.cache = self._vstep(
+            self.params, self.pos, self.cache, jnp.asarray(toks))
+        logits_np = None                 # materialized lazily, once per tick
+        for i in active:
+            s = self.slots[i]
+            if s.n_fed < len(s.prompt):
+                # prompt token consumed; logits discarded (decode convention:
+                # generation starts by re-feeding the last prompt token, same
+                # as the direct prefill+step reference path)
+                s.n_fed += 1
+                continue
+            if logits_np is None:
+                logits_np = np.asarray(logits[:, :self.cfg.vocab_size])
+            tok = self._sample(s, logits_np[i])
+            first = not s.tokens_out
+            s.tokens_out.append(tok)
+            s.last_token = tok
+            s.remaining -= 1
+            st = self.stats[s.request_id]
+            st.n_generated += 1
+            if first:
+                st.first_token_step = self.t
+                events["first_token"].append(s.request_id)
+            if s.remaining <= 0 or (s.gen.eos_id is not None
+                                    and tok == s.gen.eos_id):
+                st.finish_step = self.t
+                self.finished[s.request_id] = s.tokens_out
+                events["finished"].append(s.request_id)
+                self.slots[i] = _Slot()
+        self.t += 1
+        return events
+
+    def run(self, max_steps: int = 100_000) -> Dict[int, List[int]]:
         """Drive until every submitted request finishes."""
         steps = 0
-        while (self.queue or any(s.request_id is not None for s in self.slots)) \
-                and steps < max_steps:
-            self._admit()
-            self._decode_step()
+        while self.has_work and steps < max_steps:
+            self.step()
             steps += 1
         return self.finished
 
     # ------------------------------------------------------------- internals
 
-    def _admit(self):
-        """Claim free slots for queued requests (prefill resets the whole
-        cache position clock when the batch is empty; mid-flight admissions
-        restart the batch — the step-locked emulation of continuous batching,
-        kept simple and correct rather than overlapped)."""
-        free = [i for i, s in enumerate(self.slots) if s.request_id is None]
-        if not free or not self.queue:
-            return
-        # only admit when the batch is idle (step-locked batching)
-        if any(s.request_id is not None for s in self.slots):
-            return
-        batch_prompts = []
-        admitted = []
-        plen = max(len(p) for _, p, _ in self.queue[: len(free)])
-        for i in free:
-            if not self.queue:
-                break
-            rid, prompt, gen = self.queue.pop(0)
-            padded = np.full((plen,), 0, np.int32)
-            padded[-len(prompt):] = prompt       # left-pad
-            batch_prompts.append(padded)
-            self.slots[i] = _Slot(request_id=rid, remaining=gen.max_new_tokens,
-                                  last_token=int(prompt[-1]))
-            self.slots[i].gen = gen              # type: ignore[attr-defined]
-            admitted.append(i)
-        if not admitted:
-            return
-        while len(batch_prompts) < self.B:
-            batch_prompts.append(np.zeros((plen,), np.int32))
-        self.cache = R.init_decode_cache(
-            self.cfg, ShapeSpec("serve", self.max_len, self.B, "decode"))
-        _, self.cache = self._prefill(self.params, self.cache,
-                                      jnp.asarray(np.stack(batch_prompts)))
-
-    def _decode_step(self):
-        active = [s for s in self.slots if s.request_id is not None]
-        if not active:
-            return
-        toks = np.array([[s.last_token] for s in self.slots], np.int32)
-        logits, self.cache = self._step(self.params, self.cache,
-                                        jnp.asarray(toks))
-        self.key, sub = jax.random.split(self.key)
-        gen0 = next((getattr(s, "gen") for s in self.slots
-                     if s.request_id is not None))
-        nxt = np.asarray(sample_token(
-            logits[:, -1, : self.cfg.vocab_size], sub, gen0))
+    def _admit(self, admitted: List[int]) -> None:
+        """FIFO queue -> free slots, immediately (no batch-drain wait).  The
+        claimed slot's cache row and position clock reset; its prompt starts
+        feeding on this very tick, interleaved with the other slots'
+        decode."""
         for i, s in enumerate(self.slots):
-            if s.request_id is None:
+            if s.request_id is not None or not self.queue:
                 continue
-            tok = int(nxt[i])
-            s.tokens_out.append(tok)
-            s.last_token = tok
-            s.remaining -= 1
-            g: GenerationConfig = getattr(s, "gen")
-            if s.remaining <= 0 or (g.eos_id is not None and tok == g.eos_id):
-                self.finished[s.request_id] = s.tokens_out
-                self.slots[i] = _Slot()
+            rid, prompt, gen = self.queue.pop(0)
+            self._reset_row(i)
+            self.slots[i] = _Slot(
+                request_id=rid, gen=gen, prompt=prompt,
+                remaining=gen.max_new_tokens, last_token=int(prompt[-1]),
+                key=jax.random.fold_in(self.base_key, rid))
+            self.stats[rid].admit_step = self.t
+            admitted.append(rid)
+
+    def _reset_row(self, i: int) -> None:
+        fr = self._fresh_row
+        self.cache = {
+            "prelude": jax.tree.map(lambda full, r: full.at[i].set(r[0]),
+                                    self.cache["prelude"], fr["prelude"]),
+            "coda": jax.tree.map(lambda full, r: full.at[i].set(r[0]),
+                                 self.cache["coda"], fr["coda"]),
+            "blocks": (jax.tree.map(lambda full, r: full.at[:, i].set(r[:, 0]),
+                                    self.cache["blocks"], fr["blocks"])
+                       if self.cache["blocks"] is not None else None),
+        }
+        self.pos = self.pos.at[i].set(0)
+
+    def _sample(self, s: _Slot, logit_row: np.ndarray) -> int:
+        if s.gen.temperature <= 0.0:
+            return int(np.argmax(logit_row))         # greedy: key-free
+        s.key, sub = jax.random.split(s.key)
+        return int(sample_token(jnp.asarray(logit_row)[None], sub, s.gen)[0])

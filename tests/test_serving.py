@@ -1,4 +1,6 @@
-"""Serving engine: slot batching, sampling correctness, request lifecycle."""
+"""Serving engine: slot batching, sampling correctness, request lifecycle,
+and the checkpoint -> serving bridge (fleet snapshot to token-identical
+decode)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -81,6 +83,74 @@ def test_sampling_modes():
     assert ts.issubset({0, 1, 2, 3}) and len(ts) > 1
 
 
+def test_sample_token_topk1_is_greedy():
+    """top_k=1 keeps only the argmax whatever the temperature."""
+    key = jax.random.PRNGKey(3)
+    logits = jax.random.normal(key, (4, 16))
+    greedy = np.asarray(jnp.argmax(logits, -1))
+    for i in range(10):
+        t = sample_token(logits, jax.random.PRNGKey(i),
+                         GenerationConfig(temperature=2.3, top_k=1))
+        assert np.array_equal(np.asarray(t), greedy)
+
+
+def test_sample_token_topp1_is_plain_temperature():
+    """top_p=1.0 must keep every token: the filtered logits are bit-identical
+    to the unfiltered ones, so the sampled stream matches plain temperature
+    sampling draw for draw (regression: the cumulative-mass cutoff index used
+    to run past the vocab end)."""
+    logits = jax.random.normal(jax.random.PRNGKey(4), (3, 32))
+    for i in range(20):
+        key = jax.random.PRNGKey(100 + i)
+        plain = sample_token(logits, key, GenerationConfig(temperature=0.8))
+        nucl = sample_token(logits, key,
+                            GenerationConfig(temperature=0.8, top_p=1.0))
+        assert np.array_equal(np.asarray(plain), np.asarray(nucl))
+
+
+def test_sample_token_topk_geq_vocab_noop():
+    """top_k >= V keeps everything — same draws as unfiltered sampling."""
+    logits = jax.random.normal(jax.random.PRNGKey(5), (2, 8))
+    for k in (8, 9, 1000):
+        for i in range(10):
+            key = jax.random.PRNGKey(i)
+            plain = sample_token(logits, key,
+                                 GenerationConfig(temperature=1.1))
+            kk = sample_token(logits, key,
+                              GenerationConfig(temperature=1.1, top_k=k))
+            assert np.array_equal(np.asarray(plain), np.asarray(kk))
+
+
+def test_sample_token_topk_topp_combined():
+    """Nucleus mass is computed over the top-k survivors: with top_k=2 only
+    the two best tokens can ever be sampled, and a tiny top_p on top of that
+    collapses to the argmax."""
+    logits = jnp.asarray([[0.0, 3.0, 2.0, -1.0, 1.0]])
+    seen = set()
+    for i in range(60):
+        t = sample_token(logits, jax.random.PRNGKey(i),
+                         GenerationConfig(temperature=2.0, top_k=2,
+                                          top_p=0.95))
+        seen.add(int(t[0]))
+    assert seen.issubset({1, 2}) and len(seen) == 2
+    for i in range(10):
+        t = sample_token(logits, jax.random.PRNGKey(i),
+                         GenerationConfig(temperature=2.0, top_k=2,
+                                          top_p=0.01))
+        assert int(t[0]) == 1
+
+
+def test_sample_token_seed_determinism():
+    logits = jax.random.normal(jax.random.PRNGKey(6), (2, 64))
+    gen = GenerationConfig(temperature=1.0, top_k=8, top_p=0.9)
+    a = sample_token(logits, jax.random.PRNGKey(42), gen)
+    b = sample_token(logits, jax.random.PRNGKey(42), gen)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+    outs = {tuple(np.asarray(sample_token(logits, jax.random.PRNGKey(i), gen)))
+            for i in range(30)}
+    assert len(outs) > 1                    # the key actually matters
+
+
 def test_eos_stops_early():
     cfg = R.get_smoke_config("smollm-135m")
     params, _ = R.init_params(cfg, jax.random.PRNGKey(0))
@@ -92,3 +162,116 @@ def test_eos_stops_early():
     rid2 = eng2.submit(np.arange(1, 9),
                        GenerationConfig(max_new_tokens=8, eos_id=first))
     assert eng2.run()[rid2] == [first]
+
+
+# -- checkpoint -> serving bridge --------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def trained_fleet(tmp_path_factory):
+    """A tiny trained LM fleet plus its latest on-disk snapshot."""
+    from repro.checkpoint import io as CIO
+    from repro.core.protocol import DySTop
+    from repro.dfl import lm_worker as LW
+
+    cfg = R.get_smoke_config("smollm-135m")
+    ckdir = tmp_path_factory.mktemp("fleet_ck")
+    run = LW.LMRunConfig(n_workers=4, n_rounds=6, batch=2, seq=16,
+                         eval_every=3, seed=1, checkpoint_every=3,
+                         checkpoint_dir=str(ckdir))
+    fleet, _ = LW.run_lm_federation(DySTop(V=3.0, t_thre=3, max_neighbors=3),
+                                    cfg, run)
+    ck = CIO.latest_checkpoint(ckdir)
+    assert ck is not None
+    return cfg, fleet, ck
+
+
+def _greedy_decode(cfg, params, prompt, n):
+    """Reference: prefill + serve_step loop, greedy."""
+    from repro.configs.base import ShapeSpec
+    from repro.models import transformer as T
+
+    cache = R.init_decode_cache(cfg, ShapeSpec("d", 64, 1, "decode"))
+    _, cache = T.prefill_cache(cfg, params, cache, jnp.asarray(prompt)[None])
+    tok = jnp.asarray([[prompt[-1]]], jnp.int32)
+    out = []
+    for _ in range(n):
+        logits, cache = R.serve_step(cfg, params, cache, tok)
+        tok = jnp.argmax(logits[:, -1:, :cfg.vocab_size], -1).astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    return out
+
+
+def test_bridge_global_model_token_identical(trained_fleet):
+    """Eq. 11 global model through the npz bridge decodes token-identically
+    to averaging the in-memory ``stacked_params`` directly."""
+    from repro.serving.bridge import serving_params_from_checkpoint
+
+    cfg, fleet, ck = trained_fleet
+    bridged = serving_params_from_checkpoint(ck, cfg)
+
+    n = fleet.pbuf.shape[0]
+    alpha = jnp.full((n,), 1.0 / n, jnp.float32)
+    direct = jax.tree.map(
+        lambda l: jnp.tensordot(alpha, l.astype(jnp.float32),
+                                axes=1).astype(l.dtype),
+        fleet.stacked_params)
+
+    prompt = np.arange(3, 13, dtype=np.int32)
+    eng = ServeEngine(cfg, bridged, batch_slots=2, max_len=64)
+    rid = eng.submit(prompt, GenerationConfig(max_new_tokens=8))
+    assert eng.run()[rid] == _greedy_decode(cfg, direct, prompt, 8)
+
+
+def test_bridge_worker_row_bitwise(trained_fleet):
+    """A single worker's model survives fleet-buffer -> npz -> bridge
+    BITWISE, dtypes included (the f32 residency buffer holds bf16 leaves
+    losslessly and npz stores it exactly)."""
+    from repro.dfl import flat_state as FS
+    from repro.serving.bridge import serving_params_from_checkpoint
+
+    cfg, fleet, ck = trained_fleet
+    for w in (0, fleet.pbuf.shape[0] - 1):
+        bridged = serving_params_from_checkpoint(ck, cfg, worker=w)
+        direct = FS.unravel_row(fleet.pbuf[w], fleet.spec.params)
+        for a, b in zip(jax.tree.leaves(bridged), jax.tree.leaves(direct)):
+            assert a.dtype == b.dtype
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+    dtypes = {str(l.dtype) for l in jax.tree.leaves(bridged)}
+    assert "bfloat16" in dtypes             # the lossless-in-f32 case is live
+
+
+def test_bridge_rejects_wrong_geometry(trained_fleet):
+    from repro.serving.bridge import serving_params_from_checkpoint
+
+    cfg, _, ck = trained_fleet
+    wrong = R.get_smoke_config("gemma2-2b")
+    with pytest.raises(ValueError):
+        serving_params_from_checkpoint(ck, wrong)
+    with pytest.raises(ValueError):
+        serving_params_from_checkpoint(ck, cfg, worker=99)
+
+
+def test_flat_state_bf16_int32_bitwise_roundtrip(tmp_path):
+    """bf16 AND int32 leaves survive flatten -> f32 buffer -> npz -> load ->
+    unravel bitwise: both embed exactly in f32's 24-bit mantissa."""
+    from repro.checkpoint import io as CIO
+    from repro.dfl import flat_state as FS
+
+    key = jax.random.PRNGKey(7)
+    tree = {
+        "w": jax.random.normal(key, (1, 8, 4)).astype(jnp.bfloat16),
+        "step": jnp.asarray([[3, -7, 2 ** 23, -(2 ** 23), 0, 12345, -1]],
+                            jnp.int32),
+        "b": jax.random.normal(key, (1, 5), jnp.float32),
+    }
+    buf, spec = FS.flatten_stacked(tree)
+    path = tmp_path / "rt.npz"
+    CIO.save_checkpoint(path, {"pbuf": np.asarray(buf)})
+    loaded, _, _ = CIO.load_checkpoint(path,
+                                       {"pbuf": np.zeros(buf.shape,
+                                                         np.float32)})
+    back = FS.unravel_row(jnp.asarray(loaded["pbuf"])[0], spec)
+    for k in tree:
+        assert back[k].dtype == tree[k][0].dtype
+        assert np.array_equal(np.asarray(back[k]), np.asarray(tree[k][0]))
