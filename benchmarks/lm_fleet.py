@@ -49,6 +49,41 @@ def _us_per_round(cfg, rounds: int, reps: int = 2, **kw) -> float:
     return min(one() for _ in range(reps))
 
 
+def _us_pipeline_pair(cfg, rounds: int, reps: int = 3, **kw) -> tuple:
+    """As ``_us_per_round`` at ``pipeline_depth`` 0 and 1, additionally
+    excluding host planner time (identical in both depths — the quantity
+    the depth knob changes is pack + stage + dispatch + device wait).
+    Reps are interleaved across depths so load spikes hit both paths
+    alike; best-of is then a fair floor for each.  Returns (lockstep
+    us/round, pipelined us/round, lockstep host pack+stage us/round,
+    pipelined host pack+stage us/round, best pipelined LMHistory)."""
+    def run_cfg(depth: int):
+        return LW.LMRunConfig(n_rounds=rounds, batch=2, seq=32,
+                              eval_every=rounds, pipeline_depth=depth, **kw)
+
+    def one(depth: int):
+        _, h = LW.run_lm_federation(_mech(rounds), cfg, run_cfg(depth))
+        return ((h.wall_s - h.eval_wall_s - h.setup_wall_s
+                 - h.plan_wall_s) / rounds * 1e6, h)
+
+    for depth in (0, 1):                            # compile warmup
+        LW.run_lm_federation(_mech(rounds), cfg, run_cfg(depth))
+    best = {0: float("inf"), 1: float("inf")}
+    host = {0: float("inf"), 1: float("inf")}
+    h1 = None
+    for _ in range(reps):
+        for depth in (0, 1):
+            us, h = one(depth)
+            if us < best[depth]:
+                best[depth] = us
+                if depth == 1:
+                    h1 = h
+            host[depth] = min(
+                host[depth],
+                (h.pack_wall_s + h.stage_wall_s) / rounds * 1e6)
+    return best[0], best[1], host[0], host[1], h1
+
+
 def main(rounds: int = 24, workers: int = 8,
          arch: str = "smollm-135m") -> None:
     cfg = R.get_smoke_config(arch)
@@ -79,6 +114,40 @@ def main(rounds: int = 24, workers: int = 8,
         emit(f"lm_fleet/resident_{opt}_{workers}w", us,
              f"resident rounds under {opt} (generic Optimizer.update in the "
              f"gathered-row step)")
+
+    # async dispatch pipeline row pair (ROADMAP item 5): the SAME resident
+    # trajectory driven lockstep (depth 0 oracle) vs double-buffered (the
+    # default), host planning excluded from both (identical and overlapped
+    # by the pipelined loop on multi-core hosts).  The smoke LM round is
+    # model-compute-bound (XLA CPU executes the mega-chunk synchronously on
+    # this 1-core runner), so the end-to-end pair is context; the pinned
+    # LM-plane delta is the HOST dispatch-path cost — pack + stage per
+    # round, the exact quantity the depth knob rewires (fast uniform-bucket
+    # packer + one fused non-blocking device_put vs pack_horizon + four
+    # jnp.asarray calls).
+    lock, pipe, host0, host1, h1 = _us_pipeline_pair(cfg, rounds, **kw)
+    emit(f"lm_fleet/lockstep_{workers}w", lock,
+         "resident fleet, pipeline_depth=0 (lockstep oracle drive loop); "
+         "model-compute-bound at smoke scale")
+    emit(f"lm_fleet/pipelined_{workers}w", pipe,
+         "same trajectory, pipeline_depth=1: fast packer + fused device_put "
+         "staging + per-chunk loss drain, bounded in-flight chunks")
+    emit(f"lm_fleet/pipeline_host_lockstep_{workers}w", host0,
+         "depth-0 host dispatch-path cost per round (pack + stage walls)")
+    emit(f"lm_fleet/pipeline_host_pipelined_{workers}w", host1,
+         "depth-1 host dispatch-path cost per round (pack + stage walls)")
+    emit(f"lm_fleet/pipeline_speedup_{workers}w", host0 / host1,
+         f"pipelined LM host dispatch path is {host0 / host1:.2f}x faster "
+         f"than lockstep (bit-identical trajectories; end-to-end smoke "
+         f"rounds are model-compute-bound so the wall pair above is ~flat "
+         f"on 1 core)")
+    for phase, val in (("plan", h1.plan_wall_s), ("pack", h1.pack_wall_s),
+                       ("stage", h1.stage_wall_s),
+                       ("drain", h1.drain_wall_s)):
+        emit(f"lm_fleet/pipeline_phase_{phase}_{workers}w",
+             val / rounds * 1e6,
+             f"depth-1 {phase} host wall per round (LMHistory phase "
+             f"breakdown; drain ~= device execute)")
 
 
 if __name__ == "__main__":

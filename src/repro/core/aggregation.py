@@ -33,9 +33,10 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def mixing_matrix(active: np.ndarray, links: np.ndarray,
-                  data_sizes: np.ndarray) -> np.ndarray:
-    """Row-stochastic W (N, N) float32 per Eq. 4.
+def mixing_matrix_rows(active: np.ndarray, links: np.ndarray,
+                       data_sizes: np.ndarray
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Row-stochastic W (N, N) float32 per Eq. 4, plus its non-identity rows.
 
     links[i, j] = 1 iff worker i mixes in j's model this round (DySTop: only
     activated workers pull; SA-ADFL-style push baselines also set rows of the
@@ -43,7 +44,11 @@ def mixing_matrix(active: np.ndarray, links: np.ndarray,
     relative data sizes sigma_t^{i,j} = D_j / sum_{j' in N_i} D_j'.
 
     Vectorized: membership is links | I, weights are a masked broadcast of the
-    data sizes normalized per row — no Python row loop.
+    data sizes normalized per row — no Python row loop.  Returns ``(W, rows)``
+    where ``rows`` are the sorted indices of the non-identity rows
+    (``active | links.any(1)``) — already resolved here, so the planner can
+    carry them on the ``PlannedRound`` and the horizon packer never re-derives
+    the mask.
     """
     active = np.asarray(active, bool)
     links = np.asarray(links, bool)
@@ -61,7 +66,14 @@ def mixing_matrix(active: np.ndarray, links: np.ndarray,
         Wd = np.where(members, d[None, :], 0.0)
         Wd /= Wd.sum(axis=1, keepdims=True)
         W[rows] = Wd.astype(np.float32)
-    return W
+    return W, rows
+
+
+def mixing_matrix(active: np.ndarray, links: np.ndarray,
+                  data_sizes: np.ndarray) -> np.ndarray:
+    """Row-stochastic W (N, N) float32 per Eq. 4 (see
+    ``mixing_matrix_rows``, which also returns the non-identity row ids)."""
+    return mixing_matrix_rows(active, links, data_sizes)[0]
 
 
 def bucket_size(k: int, n: int, min_bucket: int = 8) -> int:

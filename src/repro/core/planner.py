@@ -23,7 +23,7 @@ from typing import Iterator, List, Optional, Tuple
 import numpy as np
 
 from repro.core.aggregation import (bucket_size, col_union_mask,
-                                    mixing_matrix, plan_buckets)
+                                    mixing_matrix_rows, plan_buckets)
 from repro.core.protocol import Mechanism, RoundContext
 from repro.core.staleness import StalenessState
 
@@ -49,6 +49,25 @@ class PlannedRound:
     n_transfers: int
     mix_cols: Optional[np.ndarray] = None   # (N,) bool nonzero-column union
                                   # of W (None ⇒ dispatchers re-derive it)
+    mix_rows: Optional[np.ndarray] = None   # sorted non-identity row ids of W
+                                  # (``aggregation.mixing_matrix_rows``,
+                                  # resolved at plan time; None ⇒ packers
+                                  # re-derive ``active | links.any(1)``)
+    train_rows: Optional[np.ndarray] = None  # sorted activated row ids
+                                  # (flatnonzero(active), resolved at plan
+                                  # time; None ⇒ packers re-derive)
+    mix_pad: Optional[np.ndarray] = None    # first row id OUTSIDE the mix
+                                  # set / the activation — the unsharded
+    train_pad: Optional[np.ndarray] = None  # bucket-padding candidates
+                                  # (``shard_pad_candidates`` with 1 shard),
+                                  # (1,) arrays, empty if no row qualifies
+    # memos filled by ``bucket_key``/``mix_is_train`` — the drive loops warm
+    # the key memo at plan time so the dispatch path only does lookups.
+    # Keyed/value caches only — never part of round identity or checkpoints.
+    _key_memo: dict = dataclasses.field(default_factory=dict, repr=False,
+                                        compare=False)
+    _mit_memo: Optional[bool] = dataclasses.field(default=None, repr=False,
+                                                  compare=False)
 
 
 def bucket_key(plan: "PlannedRound", n_workers: int,
@@ -65,13 +84,32 @@ def bucket_key(plan: "PlannedRound", n_workers: int,
     ``mesh_shards`` only feeds the ``col_union_mask`` fallback for plans
     whose union the planner did not resolve (a sharded planner stores the
     shard-aware union in ``mix_cols`` already).
+
+    Memoized per (col_sparse, min_bucket, mesh_shards) on the plan itself:
+    ``chunk_spans``, the horizon packer, and the dispatch pipeline all key on
+    the same buckets, and with dispatch pipelined the key is consulted once
+    per consumer rather than recomputed — the memo fills lazily at first use
+    so its cost stays in the dispatch phase, not the (benchmark-excluded)
+    planning phase.  Plans are duck-typed throughout the packers, so a plan
+    without the memo slot simply recomputes.
     """
+    memo = getattr(plan, "_key_memo", None)
+    mk = (col_sparse, min_bucket, mesh_shards)
+    if memo is not None:
+        key = memo.get(mk)
+        if key is not None:
+            return key
     base = plan_buckets(plan.active, plan.links, min_bucket)
-    if not col_sparse:
-        return base
-    cols = (plan.mix_cols if plan.mix_cols is not None
-            else col_union_mask(plan.active, plan.links, mesh_shards))
-    return base + (bucket_size(int(cols.sum()), n_workers, min_bucket),)
+    if col_sparse:
+        cols = (getattr(plan, "mix_cols", None))
+        if cols is None:
+            cols = col_union_mask(plan.active, plan.links, mesh_shards)
+        key = base + (bucket_size(int(cols.sum()), n_workers, min_bucket),)
+    else:
+        key = base
+    if memo is not None:
+        memo[mk] = key
+    return key
 
 
 def shard_spans(row_ids: np.ndarray, n_workers: int,
@@ -101,9 +139,15 @@ def mix_is_train(plan: "PlannedRound") -> bool:
     activated workers build links).  Lets a fused model plane feed the Eq. 4
     output straight into Eq. 5 without scattering and re-gathering the same
     rows; push-style baselines (SA-ADFL) set links on passive receivers and
-    return False here.
+    return False here.  Memoized on the plan (lazily, at first use) — both
+    the lockstep and pipelined dispatchers consult it per chunk.
     """
-    return not (plan.links.any(axis=1) & ~plan.active).any()
+    memo = getattr(plan, "_mit_memo", None)
+    if memo is None:
+        memo = not (plan.links.any(axis=1) & ~plan.active).any()
+        if hasattr(plan, "_mit_memo"):
+            plan._mit_memo = memo
+    return memo
 
 
 def chunk_spans(plans: List["PlannedRound"], n_workers: int,
@@ -298,7 +342,18 @@ class HorizonPlanner:
         h_t_i = cmp_part + com_part                        # (N,)
         duration = float(h_t_i[eligible].max()) if eligible.any() else 0.0
 
-        W = mixing_matrix(dec.active, dec.links, self.data_sizes)
+        # the Eq. 4 matrix and its non-identity row ids in one pass: the ids
+        # ride on the PlannedRound so dispatch-side packers (pack_horizon /
+        # pack_chunk) never re-derive the row mask the planner already built
+        W, mix_rows = mixing_matrix_rows(dec.active, dec.links,
+                                         self.data_sizes)
+        # row sets + bucket-padding candidates resolved here too: the
+        # pipelined packer's inner loop is then pure gathers/assignments
+        train_rows = np.flatnonzero(dec.active)
+        mix_mask = np.zeros(len(dec.active), bool)
+        mix_mask[mix_rows] = True
+        mix_pad = np.flatnonzero(~mix_mask)[:1]
+        train_pad = np.flatnonzero(~dec.active)[:1]
 
         # bookkeeping (Eqs. 6, 10, 33) — model-value-independent, so it can
         # run arbitrarily far ahead of the device
@@ -314,7 +369,9 @@ class HorizonPlanner:
                             synchronous=dec.synchronous, W=W,
                             duration=duration, n_transfers=n_transfers,
                             mix_cols=col_union_mask(dec.active, dec.links,
-                                                    self.mesh_shards))
+                                                    self.mesh_shards),
+                            mix_rows=mix_rows, train_rows=train_rows,
+                            mix_pad=mix_pad, train_pad=train_pad)
 
     def plan(self, horizon: int,
              max_round: Optional[int] = None) -> List[PlannedRound]:
@@ -333,6 +390,14 @@ class HorizonPlanner:
     # the original run would have planned.  The rng state is the numpy
     # BitGenerator state dict — plain ints/strs, so it survives a JSON
     # round-trip through checkpoint metadata exactly.
+    #
+    # Pipeline-depth semantics: the drive loops NEVER plan past a snapshot
+    # boundary (checkpoint rounds force a flush + pipeline drain before
+    # save_snapshot runs), so at snapshot time ``self.t`` equals the last
+    # DISPATCHED round and state_dict() needs no in-flight plan queue —
+    # resuming a pipelined run replays from the exact same stream position as
+    # a lockstep one.  That invariant is what keeps pipeline_depth out of the
+    # checkpoint format (see dfl.pipeline and docs/ARCHITECTURE.md).
 
     _STATE_ARRAYS = ("tau", "queue", "pull_counts", "time_since_act",
                      "budget", "down")

@@ -42,14 +42,15 @@ import numpy as np
 from repro.checkpoint import io as CIO
 from repro.configs.base import ModelConfig
 from repro.core.aggregation import mixing_rows, prefer_cols
-from repro.core.planner import (HorizonPlanner, PlannedRound, chunk_spans,
-                                mix_is_train)
+from repro.core.planner import (HorizonPlanner, PlannedRound, bucket_key,
+                                chunk_spans, mix_is_train)
 from repro.core.scenarios import resolve_scenario
 from repro.data.synthetic import make_token_stream
 from repro.dfl import flat_state as FS
 from repro.dfl import worker as WK
 from repro.dfl.network import (EdgeNetwork, NetworkConfig,
                                heterogeneous_compute_times)
+from repro.dfl.pipeline import DispatchPipeline
 from repro.models import registry as R
 from repro.optim import Optimizer, get_optimizer
 
@@ -431,7 +432,7 @@ class LMEngine:
     def dispatch_chunk(self, pbuf, obuf, chunk: List[PlannedRound],
                        tokens: np.ndarray, labels: np.ndarray, *,
                        col_sparse: bool, fuse: bool, min_bucket: int = 8,
-                       pregather: bool = False
+                       pregather: bool = False, key=None, walls=None
                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
         """One bucket-uniform chunk -> one donated scan dispatch.
 
@@ -441,12 +442,27 @@ class LMEngine:
         k activated rows are gathered on HOST (by the padded train-id
         segments already packed into ``ctrl``) and only (H, k, B, S) crosses
         the H2D boundary — identical values, ~N/k less batch transfer.
+
+        ``key`` (the chunk's ``bucket_key``, pipelined drive loop only)
+        routes packing through the uniform-bucket fast packer
+        (``worker.pack_chunk`` — bit-identical output, much less host work)
+        and stages all four host arrays with ONE fused non-blocking
+        ``jax.device_put``; ``key=None`` keeps the original pack/stage path
+        verbatim (the depth-0 oracle).  ``walls`` (an ``LMHistory`` or any
+        object with ``pack_wall_s``/``stage_wall_s``) accumulates the
+        per-phase host wall time.
+
         Returns (new pbuf, new obuf, (H, N) per-round losses — zero rows for
         idle workers).
         """
         shards = self.shd.n_shards if self.shd is not None else 1
-        w, c, _ = WK.pack_horizon(chunk, min_bucket=min_bucket,
-                                  col_sparse=col_sparse, shards=shards)
+        t0 = time.perf_counter()
+        if key is not None:
+            w, c, _ = WK.pack_chunk(chunk, key, min_bucket=min_bucket,
+                                    col_sparse=col_sparse, shards=shards)
+        else:
+            w, c, _ = WK.pack_horizon(chunk, min_bucket=min_bucket,
+                                      col_sparse=col_sparse, shards=shards)
         if self.shd is not None and not (col_sparse and w.shape[1]):
             w = WK.pad_w_cols(w, pbuf.shape[0])
         k_mix = w.shape[1]
@@ -458,9 +474,21 @@ class LMEngine:
             h_ix = np.arange(len(chunk))[:, None]
             tokens = tokens[h_ix, tids]                      # (H, k, B, S)
             labels = labels[h_ix, tids]
-        put = self.shd.put if self.shd is not None else jnp.asarray
+        t1 = time.perf_counter()
+        if self.shd is not None:
+            put = self.shd.put
+            w_j, c_j, tk_j, lb_j = put(w), put(c), put(tokens), put(labels)
+        elif key is not None:
+            w_j, c_j, tk_j, lb_j = jax.device_put((w, c, tokens, labels))
+        else:
+            w_j, c_j = jnp.asarray(w), jnp.asarray(c)
+            tk_j, lb_j = jnp.asarray(tokens), jnp.asarray(labels)
+        if walls is not None:
+            t2 = time.perf_counter()
+            walls.pack_wall_s += t1 - t0
+            walls.stage_wall_s += t2 - t1
         return self._mega(col_sparse, fuse, pregather and bool(k_train))(
-            pbuf, obuf, put(w), put(c), put(tokens), put(labels))
+            pbuf, obuf, w_j, c_j, tk_j, lb_j)
 
     @functools.cached_property
     def eval_global(self):
@@ -511,6 +539,10 @@ class LMRunConfig:
     optimizer: str = "adam"
     lr: float = 1e-3
     scan_horizon: int = 8
+    pipeline_depth: int = 1           # in-flight chunks behind the staged one
+                                      #   (resident engine): 1 = double
+                                      #   buffering (default), 0 = lockstep
+                                      #   oracle — bit-identical either way
     resident_fleet: bool = True
     col_sparse_mix: bool = True
     mesh_shards: int = 1
@@ -551,6 +583,10 @@ class LMRunConfig:
             v = getattr(self, f)
             if v < 1:
                 raise ValueError(f"LMRunConfig.{f} must be >= 1, got {v}")
+        if self.pipeline_depth < 0:
+            raise ValueError(f"LMRunConfig.pipeline_depth must be >= 0 "
+                             f"(0 = lockstep oracle), got "
+                             f"{self.pipeline_depth}")
         if self.checkpoint_every < 0:
             raise ValueError(f"LMRunConfig.checkpoint_every must be >= 0 "
                              f"(0 disables snapshots), got "
@@ -565,7 +601,14 @@ class LMRunConfig:
 class LMHistory:
     """Trajectory of one LM federation run (units as ``simulator.History``:
     sim_time in simulated seconds, comm in GB, staleness in rounds,
-    ``wall_s``/``eval_wall_s``/``setup_wall_s`` in real host seconds)."""
+    ``wall_s``/``eval_wall_s``/``setup_wall_s`` in real host seconds).
+
+    The ``*_wall_s`` phase breakdown mirrors ``simulator.History``:
+    ``plan_wall_s`` host planner time (every depth), ``pack_wall_s`` /
+    ``stage_wall_s`` host packing and H2D staging (pipelined path),
+    ``drain_wall_s`` host time blocked on device completion — the device-
+    execute share of the round loop.  Emitted by ``benchmarks/run.py
+    --json`` via the lm_fleet suite."""
     rounds: List[int] = dataclasses.field(default_factory=list)
     sim_time: List[float] = dataclasses.field(default_factory=list)
     comm_gb: List[float] = dataclasses.field(default_factory=list)
@@ -579,6 +622,10 @@ class LMHistory:
     wall_s: float = 0.0
     eval_wall_s: float = 0.0
     setup_wall_s: float = 0.0
+    plan_wall_s: float = 0.0
+    pack_wall_s: float = 0.0
+    stage_wall_s: float = 0.0
+    drain_wall_s: float = 0.0
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -703,28 +750,54 @@ def run_lm_federation(mechanism, cfg: ModelConfig, run: LMRunConfig,
         step = make_fleet_step(fleet)
     hist.setup_wall_s = time.time() - t_wall
 
+    # async dispatch pipeline (as run_simulation): depth >= 1 overlaps host
+    # plan/pack/stage with the device scan, depth 0 keeps the original
+    # lockstep dispatch path verbatim as the oracle
+    pipelined = run.resident_fleet and run.pipeline_depth > 0
+    pipe = DispatchPipeline(run.pipeline_depth)
+
     pending: List[Tuple[PlannedRound, Dict[str, np.ndarray]]] = []
-    loss_rows: List[Tuple[Any, np.ndarray]] = []   # ((N,) device loss, active)
+    # per entry: (device losses, active mask(s)) — the oracle paths queue one
+    # (N,) slice per round; the pipelined path queues the whole (H, N) chunk
+    # block with its H masks, so no per-round slice ops land on the dispatch
+    # critical path and nothing is fetched before a history boundary
+    loss_rows: List[Tuple[Any, Any]] = []
 
     def flush():
         nonlocal sp, so
         plans = [p for p, _ in pending]
         if run.resident_fleet:
-            for lo, hi, key in chunk_spans(plans, n,
-                                           col_sparse=run.col_sparse_mix,
-                                           min_bucket=run.min_bucket,
-                                           mesh_shards=run.mesh_shards):
+            t0 = time.perf_counter()
+            spans = list(chunk_spans(plans, n,
+                                     col_sparse=run.col_sparse_mix,
+                                     min_bucket=run.min_bucket,
+                                     mesh_shards=run.mesh_shards))
+            hist.pack_wall_s += time.perf_counter() - t0
+            for lo, hi, key in spans:
                 chunk = plans[lo:hi]
                 col = run.col_sparse_mix and prefer_cols(key[0], key[2], n)
                 fuse = all(mix_is_train(p) for p in chunk)
+                t0 = time.perf_counter()
                 tokens = np.stack([b["tokens"] for _, b in pending[lo:hi]])
                 labels = np.stack([b["labels"] for _, b in pending[lo:hi]])
-                fleet.pbuf, fleet.obuf, losses = engine.dispatch_chunk(
-                    fleet.pbuf, fleet.obuf, chunk, tokens, labels,
-                    col_sparse=col, fuse=fuse, min_bucket=run.min_bucket,
-                    pregather=run.host_batch_gather)
-                for j, p in enumerate(chunk):
-                    loss_rows.append((losses[j], p.active))
+                hist.pack_wall_s += time.perf_counter() - t0
+                if pipelined:
+                    fleet.pbuf, fleet.obuf, losses = engine.dispatch_chunk(
+                        fleet.pbuf, fleet.obuf, chunk, tokens, labels,
+                        col_sparse=col, fuse=fuse, min_bucket=run.min_bucket,
+                        pregather=run.host_batch_gather, key=key, walls=hist)
+                    loss_rows.append((losses, [p.active for p in chunk]))
+                    # the loss block is the non-donated output of the chunk's
+                    # executable — the in-flight token (pbuf/obuf are donated
+                    # into the next dispatch, see DispatchPipeline)
+                    pipe.submit(losses)
+                else:
+                    fleet.pbuf, fleet.obuf, losses = engine.dispatch_chunk(
+                        fleet.pbuf, fleet.obuf, chunk, tokens, labels,
+                        col_sparse=col, fuse=fuse, min_bucket=run.min_bucket,
+                        pregather=run.host_batch_gather, walls=hist)
+                    for j, p in enumerate(chunk):
+                        loss_rows.append((losses[j], p.active))
         else:
             for p, b in pending:
                 sp = fleet_mix_stacked(sp, p.W, p.active, p.links,
@@ -737,10 +810,14 @@ def run_lm_federation(mechanism, cfg: ModelConfig, run: LMRunConfig,
     def drain_losses():
         """Materialize queued per-round losses (device sync happens at eval
         boundaries only, so round dispatches stay queued in between)."""
-        for losses, active in loss_rows:
-            row = np.asarray(losses)[:len(active)]     # drop shard padding
-            hist.round_loss.append(float(row[active].mean())
-                                   if active.any() else 0.0)
+        for losses, actives in loss_rows:
+            arr = np.asarray(losses)
+            if isinstance(actives, np.ndarray):  # per-round (oracle paths)
+                arr, actives = arr[None], [actives]
+            for row, active in zip(arr, actives):
+                row = row[:len(active)]          # drop shard padding
+                hist.round_loss.append(float(row[active].mean())
+                                       if active.any() else 0.0)
         loss_rows.clear()
 
     def save_snapshot(t: int) -> None:
@@ -773,7 +850,15 @@ def run_lm_federation(mechanism, cfg: ModelConfig, run: LMRunConfig,
         CIO.prune_checkpoints(run.checkpoint_dir, run.checkpoint_keep)
 
     while planner.t < run.n_rounds:
+        t0p = time.perf_counter()
         p = planner.plan_round()
+        if run.resident_fleet:
+            # resolve the shape-bucket key at plan time (memoized on the
+            # plan; as run_simulation) so chunk_spans only does lookups
+            bucket_key(p, n, col_sparse=run.col_sparse_mix,
+                       min_bucket=run.min_bucket,
+                       mesh_shards=run.mesh_shards)
+        hist.plan_wall_s += time.perf_counter() - t0p
         b = next(streams)                 # one draw per round, EITHER path
         hist.round_durations.append(p.duration)
         hist.round_active.append(int(p.active.sum()))
@@ -784,6 +869,10 @@ def run_lm_federation(mechanism, cfg: ModelConfig, run: LMRunConfig,
         at_boundary = scen is not None and (p.t + 1) in scen.boundaries
         if do_eval or do_ckpt or at_boundary or len(pending) >= horizon:
             flush()
+            # read-back boundaries drain: eval / drain_losses /
+            # save_snapshot must see round-consistent resident buffers
+            if pipelined and (do_eval or do_ckpt or at_boundary):
+                pipe.drain()
         if do_eval:
             jax.block_until_ready(fleet.pbuf if run.resident_fleet
                                   else jax.tree.leaves(sp)[0])
@@ -812,6 +901,8 @@ def run_lm_federation(mechanism, cfg: ModelConfig, run: LMRunConfig,
             save_snapshot(p.t)
 
     flush()
+    pipe.drain()
+    hist.drain_wall_s += pipe.drain_wall_s
     drain_losses()
     if not run.resident_fleet:
         fleet.stacked_params = sp         # write the oracle state back once

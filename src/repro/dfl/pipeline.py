@@ -1,0 +1,77 @@
+"""Double-buffered host↔device dispatch pipeline (ROADMAP item 5).
+
+JAX dispatch is asynchronous: a donated ``mega_round_step`` /
+``LMEngine._mega`` call returns immediately with futures while XLA executes
+in the background.  The lockstep drive loops never exploited that — the next
+host action after a dispatch was either another dispatch (fine) or a blocking
+read (eval, snapshot, loss drain) that serialized host planning/packing with
+device execution.  ``DispatchPipeline`` makes the overlap explicit and
+BOUNDED: the driver ``submit()``s each in-flight chunk's output arrays, and
+the pipeline blocks only when more than ``depth`` chunks are outstanding —
+so while the device executes horizon chunk H, the host plans, packs
+(``worker.pack_chunk``) and stages (one fused non-blocking
+``jax.device_put``) chunk H+1.
+
+Values are untouched: the pipeline never reorders dispatches, and every
+read-back boundary — eval, snapshot, scenario event, end of run — calls
+``drain()`` first, so ``save_snapshot`` still reads a round-consistent buffer
+and resume stays bit-identical to the depth-0 lockstep oracle (pinned by
+tests/test_pipeline.py and scripts/chaos_check.py).  Depth semantics:
+
+  * ``depth == 0`` — lockstep: ``submit`` blocks immediately (the drive loops
+    additionally keep their original code path verbatim as the oracle);
+  * ``depth >= 1`` — up to that many chunks in flight behind the one being
+    staged (depth 1 is classic double buffering, the default on both planes).
+
+``drain_wall_s`` accounts every second the host spent blocked on device
+completion (back-pressure inside ``submit`` plus boundary drains) — the
+"device execute" column of the per-phase wall-time breakdown recorded in
+``History`` / ``LMHistory`` and emitted by the benchmarks.
+
+This is also the dispatch discipline a multi-host ``jax.distributed`` lane
+would keep: the planner is model-value-independent, so broadcasting
+``PlannedRound``s to per-shard hosts ahead of their device streams is the
+same submit/drain contract with the network in the middle.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Any
+
+import jax
+
+
+class DispatchPipeline:
+    """Bounded queue of in-flight device dispatches (see module docstring)."""
+
+    def __init__(self, depth: int):
+        self.depth = max(0, int(depth))
+        self._inflight: deque = deque()
+        self.drain_wall_s = 0.0
+
+    def submit(self, token: Any) -> None:
+        """Register one dispatched chunk's output (any jax array/pytree);
+        blocks the OLDEST in-flight chunk(s) once more than ``depth`` are
+        outstanding — back-pressure, so host plan-ahead stays bounded and
+        donated buffers cannot pile up."""
+        if self.depth == 0:
+            t0 = time.perf_counter()
+            jax.block_until_ready(token)
+            self.drain_wall_s += time.perf_counter() - t0
+            return
+        self._inflight.append(token)
+        while len(self._inflight) > self.depth:
+            t0 = time.perf_counter()
+            jax.block_until_ready(self._inflight.popleft())
+            self.drain_wall_s += time.perf_counter() - t0
+
+    def drain(self) -> None:
+        """Block until every in-flight chunk has executed.  Called at every
+        read-back boundary (eval / snapshot / scenario event / end of run):
+        after a drain the resident buffers are round-consistent and host
+        reads charge no device time to the wrong phase."""
+        t0 = time.perf_counter()
+        while self._inflight:
+            jax.block_until_ready(self._inflight.popleft())
+        self.drain_wall_s += time.perf_counter() - t0

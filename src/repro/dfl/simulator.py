@@ -26,9 +26,10 @@ from repro.checkpoint import io as CIO
 from repro.core.aggregation import (apply_mixing, mixing_rows,
                                     mixing_rows_cols, padded_rows,
                                     prefer_cols)
-from repro.core.planner import (HorizonPlanner, PlannedRound, chunk_spans,
-                                mix_is_train)
+from repro.core.planner import (HorizonPlanner, PlannedRound, bucket_key,
+                                chunk_spans, mix_is_train)
 from repro.core.scenarios import resolve_scenario
+from repro.dfl.pipeline import DispatchPipeline
 from repro.core.protocol import Mechanism
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import (ClassificationData, make_classification,
@@ -51,6 +52,18 @@ class SimConfig:
     / history points and at the round cap, so histories are identical at any
     horizon; ``scan_horizon=1`` dispatches per-round via ``round_step`` (the
     PR-1 oracle path, bit-for-bit).  Ignored by the legacy per-leaf path.
+
+    ``pipeline_depth`` (fused engine only): the async dispatch pipeline
+    (``dfl.pipeline.DispatchPipeline``).  Depth 0 is the original lockstep
+    drive loop, kept VERBATIM as the oracle; depth >= 1 (default 1 — double
+    buffering) dispatches each bucket-uniform chunk through the fast
+    uniform-bucket packer (``worker.pack_chunk``) and one fused non-blocking
+    ``jax.device_put`` staging call, letting the host plan/pack/stage chunk
+    H+1 while the device executes chunk H, with at most ``depth`` chunks in
+    flight.  Trajectories are bit-identical at any depth — evals, snapshots,
+    and scenario-event flushes drain the pipeline first, so every read-back
+    sees a round-consistent buffer (pinned by tests/test_pipeline.py,
+    including SIGKILL-resume via scripts/chaos_check.py).
     """
     n_workers: int = 100
     n_rounds: int = 300               # round cap
@@ -101,6 +114,13 @@ class SimConfig:
                                       #   ahead and execute them as one
                                       #   lax.scan mega-dispatch (see class
                                       #   docstring); 1 = per-round dispatch
+    pipeline_depth: int = 1           # fused engine: max chunks in flight on
+                                      #   the async dispatch pipeline (see
+                                      #   class docstring).  0 = the lockstep
+                                      #   oracle path; 1 (default) = double-
+                                      #   buffered host/device overlap.
+                                      #   Bit-identical trajectories at any
+                                      #   depth
     col_sparse_mix: bool = True       # fused engine: contract Eq. 4 over the
                                       #   gathered union of nonzero mixing
                                       #   COLUMNS — (k, u) @ (u, P) with
@@ -182,6 +202,10 @@ class SimConfig:
             v = getattr(self, f)
             if v < 1:
                 raise ValueError(f"SimConfig.{f} must be >= 1, got {v}")
+        if self.pipeline_depth < 0:
+            raise ValueError(f"SimConfig.pipeline_depth must be >= 0 "
+                             f"(0 = lockstep oracle), got "
+                             f"{self.pipeline_depth}")
         if self.checkpoint_every < 0:
             raise ValueError(f"SimConfig.checkpoint_every must be >= 0 "
                              f"(0 disables snapshots), got "
@@ -202,6 +226,18 @@ class History:
     ``staleness_avg``/``staleness_max`` are in ROUNDS since last activation
     (Eq. 6); ``wall_s``/``eval_wall_s``/``setup_wall_s`` are REAL host
     seconds (benchmark accounting, not simulation state).
+
+    Per-phase breakdown (real host seconds, benchmark accounting):
+    ``plan_wall_s`` is time in ``planner.plan_round`` (recorded at every
+    pipeline depth); ``pack_wall_s`` (chunk splitting + control-tensor
+    packing), ``stage_wall_s`` (H2D ``device_put`` staging) and
+    ``drain_wall_s`` (host blocked on device completion — back-pressure +
+    boundary drains) are recorded by the pipelined dispatch path
+    (``pipeline_depth >= 1``; the depth-0 oracle keeps its original
+    interleaved code and leaves them 0).  wall_s - eval_wall_s -
+    setup_wall_s - plan_wall_s is the dispatch-plane cost the pipelining
+    benchmark rows report, and drain_wall_s approximates the device-execute
+    share of it.
     """
     rounds: List[int] = dataclasses.field(default_factory=list)
     sim_time: List[float] = dataclasses.field(default_factory=list)
@@ -222,6 +258,10 @@ class History:
                                   #   what the round-engine benchmark reports
     round_durations: List[float] = dataclasses.field(default_factory=list)
     round_active: List[int] = dataclasses.field(default_factory=list)
+    plan_wall_s: float = 0.0      # host wall in planner.plan_round
+    pack_wall_s: float = 0.0      # chunk split + control-tensor packing
+    stage_wall_s: float = 0.0     # H2D device_put staging
+    drain_wall_s: float = 0.0     # host blocked on device completion
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -399,6 +439,11 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
     # architecture plugged into the flat buffer falls back to the AD scan
     fused_sgd = (cfg.fused_engine and cfg.fused_local_sgd
                  and WK.fused_sgd_supported(flat_spec))
+    # async dispatch pipeline (ROADMAP item 5): depth >= 1 overlaps host
+    # plan/pack/stage with device execution, bounded at `depth` chunks in
+    # flight; depth 0 keeps the original lockstep flush() verbatim (oracle)
+    pipelined = cfg.fused_engine and cfg.pipeline_depth > 0
+    pipe = DispatchPipeline(cfg.pipeline_depth)
 
     def use_cols(key):
         """Column-sparse contraction for a chunk with these shape buckets?
@@ -485,6 +530,89 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
                                             lr=cfg.lr,
                                             local_steps=cfg.local_steps)
 
+    def flush_pipelined(plans):
+        """The depth >= 1 twin of ``flush``: identical dispatches (same
+        chunk splits, same jitted step functions, same values — pinned
+        bit-identical by tests/test_pipeline.py), different host schedule.
+        Three host-side cuts keep the critical path short so the device
+        never waits on packing: the uniform-bucket fast packer
+        (``worker.pack_chunk``, using the planner-resolved ``mix_rows``),
+        ONE fused non-blocking ``jax.device_put`` per chunk instead of three
+        ``jnp.asarray`` round-trips, and no implicit block — ``pipe.submit``
+        bounds the in-flight chunks and the drive loop drains only at
+        read-back boundaries.  Per-phase walls land in the History."""
+        nonlocal buf
+        put = shd.put if shd is not None else None
+        n_rows = cfg.n_workers + (shd.pad(cfg.n_workers) if shd else 0)
+        t0 = time.perf_counter()
+        spans = list(chunk_spans(plans, cfg.n_workers,
+                                 col_sparse=cfg.col_sparse_mix,
+                                 min_bucket=cfg.min_bucket,
+                                 mesh_shards=cfg.mesh_shards))
+        hist.pack_wall_s += time.perf_counter() - t0
+        for lo, hi, key in spans:
+            chunk = plans[lo:hi]
+            col = use_cols(key)
+            t0 = time.perf_counter()
+            if len(chunk) > 1:
+                w_rows_h, ctrl_h, ts = WK.pack_chunk(
+                    chunk, key, min_bucket=cfg.min_bucket, col_sparse=col,
+                    shards=cfg.mesh_shards)
+                if not col:
+                    w_rows_h = WK.pad_w_cols(w_rows_h, n_rows)
+                mit = fused_sgd and all(mix_is_train(p) for p in chunk)
+                t1 = time.perf_counter()
+                hist.pack_wall_s += t1 - t0
+                if put is not None:
+                    w_j, c_j, ts_j = put(w_rows_h), put(ctrl_h), put(ts)
+                else:
+                    w_j, c_j, ts_j = jax.device_put((w_rows_h, ctrl_h, ts))
+                hist.stage_wall_s += time.perf_counter() - t1
+                buf, done = WK.mega_round_step(
+                    buf, w_j, c_j, ts_j, data_x, data_y, part_idx,
+                    part_sizes, batch_key, spec=flat_spec, lr=cfg.lr,
+                    local_steps=cfg.local_steps, batch_size=cfg.batch_size,
+                    use_kernel=cfg.use_kernel, col_sparse=col,
+                    fused_sgd=fused_sgd, with_losses=False,
+                    mix_is_train=mit, shd=shd)
+            else:
+                p = chunk[0]
+                if col:
+                    w_rows, mix_ids, col_ids = mixing_rows_cols(
+                        p.W, p.active, p.links, cols_mask=p.mix_cols,
+                        min_bucket=cfg.min_bucket, shards=cfg.mesh_shards)
+                else:
+                    w_rows, mix_ids = mixing_rows(p.W, p.active, p.links,
+                                                  min_bucket=cfg.min_bucket,
+                                                  shards=cfg.mesh_shards)
+                    w_rows = WK.pad_w_cols(w_rows, n_rows)
+                    col_ids = None
+                train_ids, train_mask = padded_rows(
+                    p.active, min_bucket=cfg.min_bucket,
+                    shards=cfg.mesh_shards)
+                ctrl = WK.pack_round_ctrl(mix_ids, train_ids, train_mask,
+                                          col_ids=col_ids)
+                mit = fused_sgd and mix_is_train(p)
+                t1 = time.perf_counter()
+                hist.pack_wall_s += t1 - t0
+                if put is not None:
+                    w_j, c_j = put(w_rows), put(ctrl)
+                else:
+                    w_j, c_j = jax.device_put((w_rows, ctrl))
+                hist.stage_wall_s += time.perf_counter() - t1
+                buf, done = WK.round_step(
+                    buf, w_j, c_j, data_x, data_y, part_idx, part_sizes,
+                    batch_key, np.int32(p.t), spec=flat_spec, lr=cfg.lr,
+                    local_steps=cfg.local_steps, batch_size=cfg.batch_size,
+                    use_kernel=cfg.use_kernel, col_sparse=col,
+                    fused_sgd=fused_sgd, with_losses=False,
+                    mix_is_train=mit, shd=shd)
+            # track the NON-donated output: the buffer itself is donated
+            # into the next chunk's dispatch, so it cannot be the in-flight
+            # token; the loss output of the SAME executable materializes
+            # exactly when the chunk finishes
+            pipe.submit(done)
+
     def save_snapshot(t: int) -> None:
         """Atomic full-state snapshot: model rows + complete planner control
         state + rng streams + history.  Called only at flush boundaries, so
@@ -516,7 +644,17 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
     pending: list[PlannedRound] = []
     stop = False
     while planner.t < cfg.n_rounds and not stop:
+        t0p = time.perf_counter()
         p = planner.plan_round()
+        if cfg.fused_engine:
+            # resolve the round's shape-bucket key at plan time (memoized on
+            # the plan, every depth): dispatch-path chunk_spans then only
+            # does lookups — bucketing is control-plane work and belongs
+            # with the planner, not on the dispatch critical path
+            bucket_key(p, cfg.n_workers, col_sparse=cfg.col_sparse_mix,
+                       min_bucket=cfg.min_bucket,
+                       mesh_shards=cfg.mesh_shards)
+        hist.plan_wall_s += time.perf_counter() - t0p
         t = p.t
         sim_clock = planner.sim_clock
         hist.round_durations.append(p.duration)
@@ -548,8 +686,15 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
         at_boundary = scen is not None and (t + 1) in scen.boundaries
         if (do_eval or stop or t == cfg.n_rounds or do_ckpt or at_boundary
                 or len(pending) >= horizon):
-            flush(pending)
+            (flush_pipelined if pipelined else flush)(pending)
             pending = []
+            # read-back boundaries drain the pipeline: eval and
+            # save_snapshot must see a round-consistent buffer, and a
+            # scenario-event flush keeps host plan-ahead from racing past
+            # the fault-phase change it just chopped the chunk for
+            if pipelined and (do_eval or stop or do_ckpt or at_boundary
+                              or t == cfg.n_rounds):
+                pipe.drain()
         if do_eval:
             # drain queued round dispatches first so their device time is
             # charged to the rounds, not to the eval
@@ -589,6 +734,8 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
             # round's history point — the resumed run never re-evals it
             save_snapshot(t)
 
+    pipe.drain()
+    hist.drain_wall_s += pipe.drain_wall_s
     hist.wall_s = time.time() - t_wall
     if bound_log is not None:
         hist.bound_log = bound_log  # type: ignore[attr-defined]

@@ -623,6 +623,89 @@ def pack_horizon(plans, min_bucket: int = 8, col_sparse: bool = False,
     return w_rows_h, ctrl_h, ts
 
 
+def pack_chunk(plans, key, *, min_bucket: int = 8, col_sparse: bool = False,
+               shards: int = 1) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """``pack_horizon`` specialized to a bucket-uniform ``chunk_spans`` chunk.
+
+    The pipelined dispatcher's packer: every plan in a chunk shares the
+    ``bucket_key`` triple ``key`` by construction, so the per-plan bucket
+    re-derivation (``plan_buckets`` + column-union counting) and the
+    general-purpose gather helpers collapse into one direct loop — the padded
+    shapes are ``key`` itself.  Uses ``PlannedRound.mix_rows`` (the
+    non-identity row ids the planner already resolved) when present.  Output
+    is BIT-IDENTICAL to ``pack_horizon`` on the same chunk (pinned by
+    tests/test_pipeline.py) at roughly half the host cost — this packer plus
+    the single fused ``jax.device_put`` staging is where the pipelined
+    dispatch path buys its host-side headroom.
+
+    Falls back to ``pack_horizon`` verbatim for the cases the fast loop does
+    not specialize: sharded padding layouts (``shards > 1``), all-idle chunks
+    (``k_mix == 0``), and the degenerate full-width column union
+    (``u >= N`` — ``mixing_rows_cols`` switches to ``col_ids = arange(N)``
+    there).
+    """
+    from repro.core.aggregation import col_union_mask
+
+    n = plans[0].W.shape[0]
+    k_mix, k_train = int(key[0]), int(key[1])
+    u = int(key[2]) if col_sparse and len(key) > 2 else 0
+    if shards > 1 or k_mix == 0 or (col_sparse and u >= n):
+        return pack_horizon(plans, min_bucket=min_bucket,
+                            col_sparse=col_sparse, shards=shards)
+    h = len(plans)
+    w = np.zeros((h, k_mix, u if col_sparse else n), np.float32)
+    ctrl = np.empty((h, k_mix + (u if col_sparse else 0) + 2 * k_train),
+                    np.int32)
+    ts = np.empty((h,), np.int32)
+    for i, p in enumerate(plans):
+        rows = (p.mix_rows if getattr(p, "mix_rows", None) is not None
+                else np.flatnonzero(p.active | p.links.any(axis=1)))
+        k = len(rows)
+        if k_mix > k:
+            # the unsharded padding rule: the globally-first idle row,
+            # repeated (shard_pad_candidates with shards == 1) — the
+            # candidate is planner-resolved (PlannedRound.mix_pad) on the
+            # pipelined path
+            cand = getattr(p, "mix_pad", None)
+            if cand is None:
+                mask = np.zeros(n, bool)
+                mask[rows] = True
+                cand = np.flatnonzero(~mask)[:1]
+            rows = np.concatenate(
+                [rows, cand[np.arange(k_mix - k) % len(cand)]])
+        if col_sparse:
+            cols = np.flatnonzero(
+                p.mix_cols if getattr(p, "mix_cols", None) is not None
+                else col_union_mask(p.active, p.links, shards))
+            ut = len(cols)
+            col_ids = (np.concatenate([cols, np.zeros(u - ut, cols.dtype)])
+                       if u > ut else cols)
+            sub = p.W[rows[:, None], col_ids[None, :]]
+            sub[:, ut:] = 0.0          # padded columns contribute nothing
+            w[i] = sub
+        else:
+            w[i] = p.W[rows]
+        trows = (p.train_rows if getattr(p, "train_rows", None) is not None
+                 else np.flatnonzero(p.active))
+        kt = len(trows)
+        if k_train > kt:
+            cand = getattr(p, "train_pad", None)
+            if cand is None:
+                cand = np.flatnonzero(~p.active)[:1]
+            trows = np.concatenate(
+                [trows, cand[np.arange(k_train - kt) % len(cand)]])
+        c = ctrl[i]
+        c[:k_mix] = rows
+        off = k_mix
+        if col_sparse:
+            c[off:off + u] = col_ids
+            off += u
+        c[off:off + k_train] = trows
+        c[off + k_train:] = p.active[trows]
+        ts[i] = p.t
+    return w, ctrl, ts
+
+
 @functools.partial(jax.jit,
                    static_argnames=("spec", "lr", "local_steps", "batch_size",
                                     "use_kernel", "col_sparse", "fused_sgd",
