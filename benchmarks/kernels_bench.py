@@ -12,6 +12,10 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit
+from repro.dfl import flat_state as FS
+from repro.dfl import worker as WK
+from repro.kernels import fused_sgd as FSGD
+from repro.kernels import ops as K
 from repro.kernels import ref as REF
 
 
@@ -24,24 +28,64 @@ def _time(fn, *args, iters: int = 20) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def main() -> None:
+def main(quick: bool = False) -> None:
     key = jax.random.PRNGKey(0)
+    it = (lambda n: max(1, n // 4)) if quick else (lambda n: n)
     # aggregate: 100 workers x 1M flat params (the simulation hot spot)
     W = jax.nn.softmax(jax.random.normal(key, (100, 100)), -1)
     X = jax.random.normal(key, (100, 1_000_000))
     agg = jax.jit(REF.aggregate_ref)
-    emit("kernel/aggregate_ref_100x1M", _time(agg, W, X),
+    emit("kernel/aggregate_ref_100x1M", _time(agg, W, X, iters=it(20)),
          "jnp oracle (XLA CPU); Pallas path validated in tests (interpret)")
 
     q = jax.random.normal(key, (4, 8, 1024, 64), jnp.float32)
     att = jax.jit(lambda q_: REF.flash_attention_ref(q_, q_, q_, causal=True))
-    emit("kernel/attention_ref_4x8x1024x64", _time(att, q, iters=5),
+    emit("kernel/attention_ref_4x8x1024x64", _time(att, q, iters=it(5)),
          "jnp oracle causal attention")
 
     logits = jax.random.normal(key, (65536, 384))
     rt = jax.jit(lambda l: REF.moe_router_ref(l, 8))
-    emit("kernel/router_ref_65536x384_top8", _time(rt, logits, iters=5),
+    emit("kernel/router_ref_65536x384_top8", _time(rt, logits, iters=it(5)),
          "jnp oracle softmax+top8+renorm")
+
+    # fused multi-step local SGD (Eq. 5): jnp oracle vs the VMEM-resident
+    # Pallas kernel on the same gathered (k, P) slab.  On CPU the kernel runs
+    # in interpret mode, so its number is cost-on-record (plumbing proof);
+    # the perf claim is TPU-only (docs/BENCHMARKS.md).
+    k, dim, hidden, classes, steps, batch = 64, 128, 64, 10, 4, 32
+    stacked = WK.init_stacked(key, k, dim, hidden, classes)
+    buf, spec = FS.flatten_stacked(stacked)
+    kx, ky = jax.random.split(key)
+    xb = jax.random.normal(kx, (k, steps, batch, dim), jnp.float32)
+    yb = jax.random.randint(ky, (k, steps, batch), 0, classes)
+    act = jnp.ones((k,), bool)
+    oracle = jax.jit(lambda b: WK.local_sgd_flat_fused(
+        b, xb, yb, act, spec, 0.05, with_losses=False)[0])
+    emit(f"kernel/fused_sgd_ref_{k}wx{steps}s",
+         _time(oracle, buf, iters=it(20)),
+         "jnp fused-SGD oracle (XLA CPU), manual backward, unrolled steps")
+    kern = jax.jit(lambda b: FSGD.fused_sgd(
+        b, xb, yb, act, spec, 0.05, with_losses=False)[0])
+    emit(f"kernel/fused_sgd_kernel_{k}wx{steps}s",
+         _time(kern, buf, iters=it(3)),
+         "Pallas VMEM-resident fused-SGD kernel, same slab (interpret mode "
+         "on CPU — cost-on-record; compiles on TPU)")
+
+    # sharded panel aggregate (Eq. 4 over a row-partitioned buffer): emits
+    # only with >= 2 devices (CI's multi-device lane forces 8 emulated host
+    # devices); single-device runs keep the baseline row set unchanged.
+    if jax.device_count() >= 2:
+        from repro.sharding.rules import FleetSharding
+        shd = FleetSharding.create(jax.device_count())
+        s = shd.n_shards
+        n, kk, p = 96, 16, 65_536
+        Xs = jax.random.normal(key, (n, p), jnp.float32)
+        Wr = jax.nn.softmax(jax.random.normal(key, (kk, n)), -1)
+        shk = jax.jit(lambda w, x: K.aggregate_rows_sharded(w, x, shd))
+        emit(f"kernel/aggregate_rows_sharded{s}_{kk}x{n}x{p // 1024}k",
+             _time(shk, Wr, Xs, iters=it(3)),
+             f"shard_map panel kernel, {s}-way emulated mesh (interpret "
+             f"mode — collective-plumbing proof, not a perf claim)")
 
 
 if __name__ == "__main__":

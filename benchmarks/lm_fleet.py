@@ -25,6 +25,7 @@ from __future__ import annotations
 
 from repro.core.protocol import DySTop
 from repro.dfl import lm_worker as LW
+from repro.kernels.config import KernelConfig
 from repro.models import registry as R
 
 from benchmarks.common import emit
@@ -148,6 +149,26 @@ def main(rounds: int = 24, workers: int = 8,
              val / rounds * 1e6,
              f"depth-1 {phase} host wall per round (LMHistory phase "
              f"breakdown; drain ~= device execute)")
+
+    # kernel plane pair (ROADMAP item 4): the same resident trajectory per
+    # zoo family with the forward pass routed through the Pallas kernels
+    # (flash_attention / ssd_chunk / moe_router) vs the reference einsum
+    # forward.  On CPU the kernels run in interpret mode, so the kernel
+    # number is cost-on-record (the plumbing + parity proof lives in
+    # tests/test_kernel_plane.py); the perf claim is TPU-only.
+    kkw = dict(n_workers=4)
+    kr = max(4, rounds // 6)
+    for karch in ("smollm-135m", "mamba2-2.7b", "kimi-k2-1t-a32b"):
+        kcfg = R.get_smoke_config(karch)
+        tag = karch.split("-")[0]
+        ref_us = _us_per_round(kcfg, kr, reps=1, resident_fleet=True, **kkw)
+        pal_us = _us_per_round(kcfg, kr, reps=1, resident_fleet=True,
+                               kernels=KernelConfig(backend="pallas"), **kkw)
+        emit(f"lm_fleet/forward_ref_{tag}_4w", ref_us,
+             f"{karch} smoke fleet, reference einsum forward (XLA CPU)")
+        emit(f"lm_fleet/forward_kernel_{tag}_4w", pal_us,
+             f"{karch} smoke fleet, Pallas zoo-kernel forward (interpret "
+             f"mode on CPU — cost-on-record; compiles on TPU)")
 
 
 if __name__ == "__main__":

@@ -50,16 +50,19 @@ from repro.dfl import worker as WK
 from repro.dfl.network import (EdgeNetwork, NetworkConfig,
                                heterogeneous_compute_times)
 from repro.dfl.simulator import SimConfig, run_simulation
+from repro.kernels import fused_sgd as FSGD
+from repro.kernels.config import KernelConfig
 
 from benchmarks.common import emit
 
 
-def _cfg(rounds: int, workers: int, fused: bool, use_kernel: bool = False,
+def _cfg(rounds: int, workers: int, fused: bool,
+         kernels: Optional[KernelConfig] = None,
          scan_horizon: int = 1, col_sparse_mix: bool = True,
          fused_local_sgd: bool = True) -> SimConfig:
     return SimConfig(n_workers=workers, n_rounds=rounds, phi=0.5, lr=0.1,
                      eval_every=rounds, seed=0, fused_engine=fused,
-                     use_kernel=use_kernel, scan_horizon=scan_horizon,
+                     kernels=kernels, scan_horizon=scan_horizon,
                      col_sparse_mix=col_sparse_mix,
                      fused_local_sgd=fused_local_sgd)
 
@@ -69,7 +72,8 @@ def _mech(max_workers: Optional[int]) -> DySTop:
 
 
 def _us_per_round(rounds: int, workers: int, fused: bool,
-                  max_workers: Optional[int], use_kernel: bool = False,
+                  max_workers: Optional[int],
+                  kernels: Optional[KernelConfig] = None,
                   scan_horizon: int = 1, reps: int = 3,
                   col_sparse_mix: bool = True,
                   fused_local_sgd: bool = True) -> float:
@@ -79,7 +83,7 @@ def _us_per_round(rounds: int, workers: int, fused: bool,
     # from round work, syncing queued dispatches before evals so device time
     # is charged to the rounds).  Best of `reps` runs: the floor is robust to
     # scheduler noise on small boxes.
-    kw = dict(use_kernel=use_kernel, scan_horizon=scan_horizon,
+    kw = dict(kernels=kernels, scan_horizon=scan_horizon,
               col_sparse_mix=col_sparse_mix, fused_local_sgd=fused_local_sgd)
     run_simulation(_mech(max_workers), _cfg(rounds, workers, fused, **kw))
 
@@ -192,7 +196,9 @@ def _sgd_plane(k: int = 16, dim: int = 32, hidden: int = 64, ncls: int = 10,
     Times ONLY the local-SGD jit over the gathered active rows (k workers x
     ``local_steps`` — the simulator's default shapes), isolating the
     tentpole's second half from host planning and dispatch noise.  Returns
-    (us AD oracle, us fused).
+    (us AD oracle, us fused, us Pallas fused-SGD kernel).  The kernel row
+    runs interpret mode on CPU — a correctness/cost floor on record, not a
+    perf claim (docs/BENCHMARKS.md).
     """
     stacked = WK.init_stacked(jax.random.PRNGKey(0), k, dim, hidden, ncls,
                               same_init=False)
@@ -206,6 +212,8 @@ def _sgd_plane(k: int = 16, dim: int = 32, hidden: int = 64, ncls: int = 10,
                                                   0.05)[0]),
         "fused": jax.jit(lambda b: WK.local_sgd_flat_fused(
             b, xb, yb, act, spec, 0.05, with_losses=False)[0]),
+        "kernel": jax.jit(lambda b: FSGD.fused_sgd(
+            b, xb, yb, act, spec, 0.05, with_losses=False)[0]),
     }
     best = {n: float("inf") for n in fns}
     for fn in fns.values():
@@ -215,7 +223,7 @@ def _sgd_plane(k: int = 16, dim: int = 32, hidden: int = 64, ncls: int = 10,
             t0 = time.perf_counter()
             jax.block_until_ready(fn(buf))
             best[name] = min(best[name], time.perf_counter() - t0)
-    return best["ad"] * 1e6, best["fused"] * 1e6
+    return best["ad"] * 1e6, best["fused"] * 1e6, best["kernel"] * 1e6
 
 
 def _dispatch_plane(workers: int, horizon: int = 8, n_plan: int = 48,
@@ -409,7 +417,7 @@ def sharded_main(quick: bool = False, workers: int = 100,
                    key=shd.put(key), put=shd.put, shd=shd),
     }
 
-    def mega_all(b, sharded: bool):
+    def mega_all(b, sharded: bool, kernels: Optional[KernelConfig] = None):
         from repro.core.planner import mix_is_train
 
         o = ops[sharded]
@@ -421,22 +429,26 @@ def sharded_main(quick: bool = False, workers: int = 100,
             b, _ = WK.mega_round_step(
                 b, o["put"](w), o["put"](c), o["put"](ts), o["data_x"],
                 o["data_y"], o["part_idx"], o["part_sizes"], o["key"],
-                mix_is_train=mit, shd=o["shd"], **kw)
+                mix_is_train=mit, shd=o["shd"], kernels=kernels, **kw)
         return b
-    variants = [("single_device", False), (f"sharded{shards}", True)]
-    state = {name: mk_state(sharded) for name, sharded in variants}
-    best = {name: float("inf") for name, _ in variants}
-    for name, sharded in variants:
-        state[name] = mega_all(state[name], sharded)
+    pallas = KernelConfig(backend="pallas")
+    variants = [("single_device", False, None), (f"sharded{shards}", True,
+                                                 None),
+                (f"sharded{shards}_kernel", True, pallas)]
+    state = {name: mk_state(sharded) for name, sharded, _ in variants}
+    best = {name: float("inf") for name, _, _ in variants}
+    for name, sharded, kc in variants:
+        state[name] = mega_all(state[name], sharded, kc)
         jax.block_until_ready(state[name])          # compile warmup
     for _ in range(reps):                           # interleaved best-of
-        for name, sharded in variants:
+        for name, sharded, kc in variants:
             t0 = time.time()
-            state[name] = mega_all(state[name], sharded)
+            state[name] = mega_all(state[name], sharded, kc)
             jax.block_until_ready(state[name])
             best[name] = min(best[name],
                              (time.time() - t0) / len(plans) * 1e6)
     single, shard = best["single_device"], best[f"sharded{shards}"]
+    shard_k = best[f"sharded{shards}_kernel"]
     emit(f"round_engine_sharded/dispatch_scan{horizon}_{workers}w", single,
          "steady mega-rounds, single-device engine (same box, mesh idle)")
     emit(f"round_engine_sharded/dispatch_scan{horizon}_sharded{shards}_"
@@ -448,6 +460,12 @@ def sharded_main(quick: bool = False, workers: int = 100,
          f"sharded/single ratio {single / shard:.2f}x on emulated devices — "
          f"recorded for plumbing regression only; real speedups are a "
          f"hardware claim (docs/BENCHMARKS.md)")
+    emit(f"round_engine_sharded/dispatch_scan{horizon}_sharded{shards}_"
+         f"kernel_{workers}w", shard_k,
+         f"same sharded plans with KernelConfig(backend='pallas'): "
+         f"shard_map panel mix + fused-SGD kernel rows (interpret mode on "
+         f"emulated devices — plumbing proof that the kernel plane composes "
+         f"with the mesh, not a perf claim)")
 
 
 def main(rounds: int = 80, workers: int = 100) -> None:
@@ -481,7 +499,7 @@ def main(rounds: int = 80, workers: int = 100) -> None:
          f"PR 2 commit the gap is wider")
     # SGD plane: the fused unrolled lowering vs the per-step AD scan at the
     # simulator's default shapes (k=16 x 2 steps x batch 32)
-    sgd_ad, sgd_fused = _sgd_plane()
+    sgd_ad, sgd_fused, sgd_kernel = _sgd_plane()
     emit(f"round_engine/sgd_ad_{workers}w", sgd_ad,
          "per-step AD lax.scan local SGD (PR 2 lowering), k=16 x 2 steps")
     emit(f"round_engine/sgd_fused_{workers}w", sgd_fused,
@@ -489,6 +507,9 @@ def main(rounds: int = 80, workers: int = 100) -> None:
     emit(f"round_engine/sgd_lowering_speedup_{workers}w", sgd_ad / sgd_fused,
          f"fused local-steps SGD is {sgd_ad / sgd_fused:.2f}x the AD scan "
          f"on the gathered active rows")
+    emit(f"round_engine/sgd_fused_kernel_{workers}w", sgd_kernel,
+         "Pallas VMEM-resident fused-SGD kernel, same shapes (interpret "
+         "mode on CPU — cost-on-record, the perf claim is TPU-only)")
     # mix plane: row-sparse vs column-sparse contraction on a real steady W
     # (k=8 active rows, u=64-column union < N=100), edge-proxy model scale
     mix_r, mix_c = _mix_plane(workers)
@@ -528,10 +549,10 @@ def main(rounds: int = 80, workers: int = 100) -> None:
          f"edge-proxy model — dispatch-overhead-bound, so the lowering wins "
          f"show up at the default model scale instead)")
     fused_k = _us_per_round(rounds, workers, fused=True, max_workers=16,
-                            use_kernel=True)
+                            kernels=KernelConfig(backend="pallas"))
     emit(f"round_engine/fused_kernel_{workers}w", fused_k,
-         "fused + Pallas aggregate kernels (interpret mode on CPU; compiles "
-         "on TPU)")
+         "fused + KernelConfig(backend='pallas'): panel mix AND fused-SGD "
+         "kernel (interpret mode on CPU; compiles on TPU)")
     # secondary: uncapped bursty activation (all-N flush rounds bound the win;
     # bucket changes every round, so scan chunks degrade to single dispatches)
     legacy_b = _us_per_round(rounds, workers, fused=False, max_workers=None)

@@ -43,8 +43,9 @@ SUITES = {
     "phase_ablation": lambda q: phase_ablation.main(rounds=100 if q else 200),
     # Theorem 1 bound evaluated on recorded histories
     "bound_check": lambda q: bound_check.main(rounds=60 if q else 120),
-    # kernel microbenchmarks
-    "kernels": lambda q: kernels_bench.main(),
+    # kernel microbenchmarks (the sharded-panel row emits only with >= 2
+    # devices — CI's multi-device lane runs this suite on 8 emulated devices)
+    "kernels": lambda q: kernels_bench.main(quick=q),
     # fused device-resident round engine vs legacy per-leaf path
     "round_engine": lambda q: round_engine.main(rounds=40 if q else 80),
     # mesh-sharded dispatch plumbing proof (emits only with >= 2 devices;

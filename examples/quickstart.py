@@ -8,6 +8,7 @@ the paper reports (accuracy vs simulated wall-clock, communication, staleness).
 """
 from repro.core.protocol import DySTop
 from repro.dfl.simulator import SimConfig, run_simulation
+from repro.kernels.config import KernelConfig
 
 
 def main():
@@ -19,7 +20,8 @@ def main():
         V=10.0,                  # Lyapunov trade-off (paper Eq. 34)
         lr=0.1,
         eval_every=20,
-        use_kernel=True,         # Pallas aggregate kernel (interpret on CPU)
+        kernels=KernelConfig(backend="pallas"),  # Pallas kernel plane
+                                 # (interpret-mode on CPU)
         seed=0,
     )
     mech = DySTop(V=cfg.V, t_thre=25, max_neighbors=5)

@@ -11,6 +11,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence
 
+from repro.kernels.config import KernelConfig
+
 
 @dataclasses.dataclass(frozen=True)
 class MoEConfig:
@@ -61,6 +63,10 @@ class ModelConfig:
     mlp_activation: str = "silu"       # silu (SwiGLU) | gelu (GeGLU)
     attn_impl: str = "naive"           # naive (einsum) | chunked (online softmax)
     attn_chunk: int = 512              # kv block for attn_impl="chunked"
+    kernels: KernelConfig = KernelConfig()  # backend="pallas" routes the
+                                       # forward pass through the zoo kernels
+                                       # (flash_attention / ssd_chunk /
+                                       # moe_router) with reference backward
     norm_eps: float = 1e-6
     tie_embeddings: bool = True
     post_norm: bool = False            # gemma2-style extra post-block norms

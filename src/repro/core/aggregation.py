@@ -26,7 +26,7 @@ matching chunk-split key for ``lax.scan`` horizons.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -313,14 +313,30 @@ def mixing_rows_cols(W: np.ndarray, active: np.ndarray, links: np.ndarray,
     return W_sub, row_ids, col_ids
 
 
-def apply_mixing(W: jnp.ndarray, stacked_models: Any, use_kernel: bool = True) -> Any:
-    """new_models = W @ models, per leaf.  Leaves: (N, ...)."""
-    if use_kernel:
+def apply_mixing(W: jnp.ndarray, stacked_models: Any, kernels: Any = None,
+                 use_kernel: Optional[bool] = None) -> Any:
+    """new_models = W @ models, per leaf.  Leaves: (N, ...).
+
+    ``kernels`` is a ``repro.kernels.config.KernelConfig`` (None = reference
+    einsum).  ``use_kernel`` is the DEPRECATED boolean it replaced.
+    """
+    if use_kernel is not None:
+        import warnings
+        warnings.warn(
+            "apply_mixing(use_kernel=...) is deprecated; pass "
+            "kernels=KernelConfig(backend='pallas') instead",
+            DeprecationWarning, stacklevel=2)
+        pallas = bool(use_kernel)
+        p_blk = 512
+    else:
+        pallas = kernels is not None and kernels.use_pallas
+        p_blk = kernels.agg_p_blk if kernels is not None else 512
+    if pallas:
         from repro.kernels import ops as K
 
         def mix(leaf):
             flat = leaf.reshape(leaf.shape[0], -1)
-            out = K.aggregate(W, flat.astype(jnp.float32))
+            out = K.aggregate(W, flat.astype(jnp.float32), p_blk=p_blk)
             return out.reshape(leaf.shape).astype(leaf.dtype)
     else:
         def mix(leaf):

@@ -22,16 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-try:                                  # jax >= 0.5 top-level API
-    from jax import shard_map
-except ImportError:                   # jax 0.4.x: experimental API, and the
-    from jax.experimental.shard_map import shard_map as _shard_map_experimental
-
-    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
-        # the old API spells the replication check ``check_rep``
-        return _shard_map_experimental(f, mesh=mesh, in_specs=in_specs,
-                                       out_specs=out_specs,
-                                       check_rep=check_vma)
+from repro.sharding.rules import shard_map
 
 from repro.core import ptca as PT
 from repro.core import waa as WA

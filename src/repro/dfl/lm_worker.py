@@ -33,6 +33,7 @@ import dataclasses
 import functools
 import pathlib
 import time
+import warnings
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 import jax
@@ -51,6 +52,7 @@ from repro.dfl import worker as WK
 from repro.dfl.network import (EdgeNetwork, NetworkConfig,
                                heterogeneous_compute_times)
 from repro.dfl.pipeline import DispatchPipeline
+from repro.kernels.config import KernelConfig
 from repro.models import registry as R
 from repro.optim import Optimizer, get_optimizer
 
@@ -181,7 +183,7 @@ def worker_streams(cfg: ModelConfig, n_workers: int, batch: int, seq: int,
 def fleet_mix_stacked(stacked_params: Params, W: np.ndarray,
                       active: Optional[np.ndarray] = None,
                       links: Optional[np.ndarray] = None,
-                      use_kernel: bool = False) -> Params:
+                      kernels=None) -> Params:
     """Eq. 4 over a STACKED param pytree, re-flattening per call.
 
     The pre-PR-4 mixing path, kept as the correctness oracle and the
@@ -190,13 +192,15 @@ def fleet_mix_stacked(stacked_params: Params, W: np.ndarray,
     back to the pytree the masked train step consumes.
     """
     buf, spec = FS.flatten_stacked(stacked_params)
+    use_pallas = kernels is not None and kernels.use_pallas
     if active is not None and links is not None:
         w_rows, row_ids = mixing_rows(np.asarray(W, np.float32), active, links)
         buf = WK.mix_flat(buf, jnp.asarray(w_rows), jnp.asarray(row_ids),
-                          use_kernel=use_kernel)
-    elif use_kernel:
+                          kernels=kernels)
+    elif use_pallas:
         from repro.kernels import ops as K
-        buf = K.aggregate(jnp.asarray(W, jnp.float32), buf)
+        buf = K.aggregate(jnp.asarray(W, jnp.float32), buf,
+                          p_blk=kernels.agg_p_blk)
     else:
         buf = jnp.asarray(W, jnp.float32) @ buf
     return FS.unflatten(buf, spec)
@@ -205,20 +209,22 @@ def fleet_mix_stacked(stacked_params: Params, W: np.ndarray,
 def fleet_mix(fleet: LMFleet, W: np.ndarray,
               active: Optional[np.ndarray] = None,
               links: Optional[np.ndarray] = None,
-              use_kernel: bool = False) -> None:
+              kernels=None) -> None:
     """Eq. 4 over the RESIDENT fleet buffer — no flatten, no pytree.
 
     When ``active``/``links`` are given, only the k non-identity rows of W
     are computed — the same gather -> (k, N) @ (N, P) -> scatter path as the
     simulation plane's fused engine.
     """
+    use_pallas = kernels is not None and kernels.use_pallas
     if active is not None and links is not None:
         w_rows, row_ids = mixing_rows(np.asarray(W, np.float32), active, links)
         fleet.pbuf = WK.mix_flat(fleet.pbuf, jnp.asarray(w_rows),
-                                 jnp.asarray(row_ids), use_kernel=use_kernel)
-    elif use_kernel:
+                                 jnp.asarray(row_ids), kernels=kernels)
+    elif use_pallas:
         from repro.kernels import ops as K
-        fleet.pbuf = K.aggregate(jnp.asarray(W, jnp.float32), fleet.pbuf)
+        fleet.pbuf = K.aggregate(jnp.asarray(W, jnp.float32), fleet.pbuf,
+                                 p_blk=kernels.agg_p_blk)
     else:
         fleet.pbuf = jnp.asarray(W, jnp.float32) @ fleet.pbuf
 
@@ -283,15 +289,17 @@ _ENGINE_CACHE: Dict[tuple, "LMEngine"] = {}
 
 
 def get_lm_engine(cfg: ModelConfig, optimizer: Optimizer,
-                  spec: FS.FleetSpec, use_kernel: bool = False,
+                  spec: FS.FleetSpec, kernels=None,
                   shd=None) -> "LMEngine":
-    """One ``LMEngine`` per (cfg, optimizer, spec, use_kernel, shd): the
+    """One ``LMEngine`` per (cfg, optimizer, spec, kernels, shd): the
     engine owns the jitted scan variants, so sharing it across runs keeps
-    repeated federations (benchmark reps, test A/Bs) compile-warm."""
-    key = (cfg, optimizer, spec, use_kernel, shd)
+    repeated federations (benchmark reps, test A/Bs) compile-warm.
+    ``kernels`` (a frozen, hashable ``KernelConfig``) is part of the cache
+    key, so reference and Pallas engines never share jits."""
+    key = (cfg, optimizer, spec, kernels, shd)
     if key not in _ENGINE_CACHE:
         _ENGINE_CACHE[key] = LMEngine(cfg, optimizer, spec,
-                                      use_kernel=use_kernel, shd=shd)
+                                      kernels=kernels, shd=shd)
     return _ENGINE_CACHE[key]
 
 
@@ -328,9 +336,9 @@ class LMEngine:
     """
 
     def __init__(self, cfg: ModelConfig, optimizer: Optimizer,
-                 spec: FS.FleetSpec, use_kernel: bool = False, shd=None):
+                 spec: FS.FleetSpec, kernels=None, shd=None):
         self.cfg, self.opt, self.spec = cfg, optimizer, spec
-        self.use_kernel = use_kernel
+        self.kernels = kernels
         self.shd = shd
         self._mega_cache: dict = {}
 
@@ -379,16 +387,16 @@ class LMEngine:
         lab_k = lab if pregather else (lab[tids] if k_train else lab)
         if fuse and k_mix and k_train:
             # mix rows == train rows: Eq. 4 output feeds Eq. 5 directly
-            sub = WK._mix_rows(pbuf, w, cids, self.use_kernel, shd)
+            sub = WK._mix_rows(pbuf, w, cids, self.kernels, shd)
             new_p, new_o, sl = self._train_rows(sub, obuf[tids], mask,
                                                 tok_k, lab_k)
             return pin(pbuf.at[tids].set(new_p), obuf.at[tids].set(new_o),
                        losses.at[tids].set(sl))
         if k_mix:
-            pbuf = (WK.mix_flat_cols(pbuf, w, mids, cids, self.use_kernel,
+            pbuf = (WK.mix_flat_cols(pbuf, w, mids, cids, self.kernels,
                                      shd=shd)
                     if cids is not None
-                    else WK.mix_flat(pbuf, w, mids, self.use_kernel, shd=shd))
+                    else WK.mix_flat(pbuf, w, mids, self.kernels, shd=shd))
         if k_train:
             new_p, new_o, sl = self._train_rows(pbuf[tids], obuf[tids], mask,
                                                 tok_k, lab_k)
@@ -556,7 +564,17 @@ class LMRunConfig:
     sync_link_timeout_s: float = 30.0
     comm_range_m: float = 80.0
     compute_sigma: float = 0.6
-    use_kernel: bool = False
+    use_kernel: bool = False          # DEPRECATED alias: True maps to
+                                      #   kernels=KernelConfig(
+                                      #   backend="pallas") in __post_init__
+    kernels: Optional["KernelConfig"] = None  # kernel-plane config (see
+                                      #   SimConfig.kernels): backend="pallas"
+                                      #   routes Eq. 4 mixing through the
+                                      #   panel kernels AND the zoo forward
+                                      #   passes through flash_attention /
+                                      #   ssd_chunk / moe_router (via
+                                      #   ModelConfig.kernels); composes with
+                                      #   mesh_shards via shard_map
     failure_prob: float = 0.0         # stochastic edge dynamics (as SimConfig)
     failure_persist: float = 0.5
     scenario: Optional[object] = None # fault plane (core.scenarios): None,
@@ -595,6 +613,28 @@ class LMRunConfig:
             raise ValueError(
                 "LMRunConfig.checkpoint_every > 0 needs checkpoint_dir: "
                 "pass the directory snapshots should land in")
+        if self.kernels is not None and not isinstance(self.kernels,
+                                                       KernelConfig):
+            raise ValueError(
+                f"LMRunConfig.kernels must be a kernels.config.KernelConfig "
+                f"(or None for the reference default), got "
+                f"{type(self.kernels).__name__}")
+        if self.use_kernel:
+            warnings.warn(
+                "LMRunConfig.use_kernel is deprecated; pass "
+                "kernels=KernelConfig(backend='pallas') instead",
+                DeprecationWarning, stacklevel=2)
+            if self.kernels is None:
+                self.kernels = KernelConfig(backend="pallas")
+            elif not self.kernels.use_pallas:
+                raise ValueError(
+                    "LMRunConfig.use_kernel=True conflicts with "
+                    "kernels=KernelConfig(backend='reference') — drop the "
+                    "deprecated flag and select the backend on KernelConfig "
+                    "alone")
+        if self.kernels is None:
+            self.kernels = KernelConfig()
+        self.kernels.check_executable("LMRunConfig.kernels")
 
 
 @dataclasses.dataclass
@@ -652,14 +692,15 @@ def run_lm_federation(mechanism, cfg: ModelConfig, run: LMRunConfig,
     """
     t_wall = time.time()
     n = run.n_workers
+    if run.kernels is not None and cfg.kernels != run.kernels:
+        # one kernel plane per run: the fleet's forward pass follows the same
+        # KernelConfig that drives the Eq. 4/5 aggregation kernels
+        cfg = dataclasses.replace(cfg, kernels=run.kernels)
     shd = None
     if run.mesh_shards > 1:
         if not run.resident_fleet:
             raise ValueError("mesh_shards > 1 requires the resident engine "
                              "(resident_fleet=True)")
-        if run.use_kernel:
-            raise ValueError("mesh_shards > 1 requires use_kernel=False "
-                             "(Pallas is not GSPMD-auto-partitionable)")
         from repro.sharding.rules import FleetSharding
         shd = FleetSharding.create(run.mesh_shards)
     rng = np.random.default_rng(run.seed)
@@ -740,7 +781,7 @@ def run_lm_federation(mechanism, cfg: ModelConfig, run: LMRunConfig,
 
     if run.resident_fleet:
         engine = get_lm_engine(cfg, fleet.optimizer, fleet.spec,
-                               use_kernel=run.use_kernel, shd=shd)
+                               kernels=run.kernels, shd=shd)
         horizon = max(1, run.scan_horizon)
         sp = so = step = None
     else:
@@ -801,7 +842,7 @@ def run_lm_federation(mechanism, cfg: ModelConfig, run: LMRunConfig,
         else:
             for p, b in pending:
                 sp = fleet_mix_stacked(sp, p.W, p.active, p.links,
-                                       use_kernel=run.use_kernel)
+                                       kernels=run.kernels)
                 batch = {k: jnp.asarray(v) for k, v in b.items()}
                 sp, so, losses = step(sp, so, batch, jnp.asarray(p.active))
                 loss_rows.append((losses, p.active))

@@ -16,6 +16,7 @@ from __future__ import annotations
 import dataclasses
 import pathlib
 import time
+import warnings
 from typing import Dict, List, Optional
 
 import jax
@@ -37,6 +38,7 @@ from repro.data.synthetic import (ClassificationData, make_classification,
 from repro.dfl import flat_state as FS
 from repro.dfl import worker as WK
 from repro.dfl.network import EdgeNetwork, NetworkConfig, heterogeneous_compute_times
+from repro.kernels.config import KernelConfig
 
 
 @dataclasses.dataclass
@@ -101,7 +103,20 @@ class SimConfig:
     eval_every: int = 10
     target_accuracy: Optional[float] = None
     seed: int = 0
-    use_kernel: bool = False          # Pallas aggregate (interpret on CPU)
+    use_kernel: bool = False          # DEPRECATED alias: True maps to
+                                      #   kernels=KernelConfig(
+                                      #   backend="pallas") in __post_init__
+                                      #   (with a DeprecationWarning)
+    kernels: Optional[KernelConfig] = None  # kernel-plane config (backend /
+                                      #   interpret policy / block sizes);
+                                      #   None = KernelConfig() = reference
+                                      #   jnp lowerings.  backend="pallas"
+                                      #   routes Eq. 4 mixing through the
+                                      #   panel kernels and Eq. 5 through the
+                                      #   VMEM-fused SGD kernel (interpret
+                                      #   mode off-TPU — the CI oracle);
+                                      #   composes with mesh_shards via
+                                      #   per-shard shard_map
     fused_engine: bool = True         # device-resident fused round engine: one
                                       #   flat (N, P) buffer, single round_step
                                       #   dispatch (sparse mix + on-device
@@ -147,8 +162,9 @@ class SimConfig:
                                       #   (the bit-exact oracle); >1 needs
                                       #   that many jax devices (CPU: set
                                       #   XLA_FLAGS=--xla_force_host_
-                                      #   platform_device_count=K) and the
-                                      #   jnp mix lowering (use_kernel off).
+                                      #   platform_device_count=K); both
+                                      #   kernel backends compose (the
+                                      #   Pallas path via shard_map panels).
                                       #   Control-plane trajectories are
                                       #   bit-identical at any shard count;
                                       #   learning curves agree to f32
@@ -214,6 +230,28 @@ class SimConfig:
             raise ValueError(
                 "SimConfig.checkpoint_every > 0 needs checkpoint_dir: pass "
                 "the directory snapshots should land in")
+        if self.kernels is not None and not isinstance(self.kernels,
+                                                       KernelConfig):
+            raise ValueError(
+                f"SimConfig.kernels must be a kernels.config.KernelConfig "
+                f"(or None for the reference default), got "
+                f"{type(self.kernels).__name__}")
+        if self.use_kernel:
+            warnings.warn(
+                "SimConfig.use_kernel is deprecated; pass "
+                "kernels=KernelConfig(backend='pallas') instead",
+                DeprecationWarning, stacklevel=2)
+            if self.kernels is None:
+                self.kernels = KernelConfig(backend="pallas")
+            elif not self.kernels.use_pallas:
+                raise ValueError(
+                    "SimConfig.use_kernel=True conflicts with "
+                    "kernels=KernelConfig(backend='reference') — drop the "
+                    "deprecated flag and select the backend on KernelConfig "
+                    "alone")
+        if self.kernels is None:
+            self.kernels = KernelConfig()
+        self.kernels.check_executable("SimConfig.kernels")
 
 
 @dataclasses.dataclass
@@ -327,11 +365,6 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
                 "mesh_shards > 1 requires the fused engine "
                 "(fused_engine=True): the legacy per-leaf path has no "
                 "resident buffer to shard")
-        if cfg.use_kernel:
-            raise ValueError(
-                "mesh_shards > 1 requires use_kernel=False: the Pallas "
-                "aggregate path cannot be GSPMD-auto-partitioned (a per-"
-                "shard shard_map lowering is the TPU follow-up)")
         from repro.sharding.rules import FleetSharding
         shd = FleetSharding.create(cfg.mesh_shards)
     if cfg.fused_engine:
@@ -485,7 +518,7 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
                         put(ts), data_x, data_y, part_idx,
                         part_sizes, batch_key, spec=flat_spec, lr=cfg.lr,
                         local_steps=cfg.local_steps,
-                        batch_size=cfg.batch_size, use_kernel=cfg.use_kernel,
+                        batch_size=cfg.batch_size, kernels=cfg.kernels,
                         col_sparse=col, fused_sgd=fused_sgd,
                         with_losses=False,
                         mix_is_train=(fused_sgd
@@ -517,13 +550,13 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
                     data_x, data_y, part_idx, part_sizes, batch_key,
                     np.int32(p.t), spec=flat_spec, lr=cfg.lr,
                     local_steps=cfg.local_steps, batch_size=cfg.batch_size,
-                    use_kernel=cfg.use_kernel,
+                    kernels=cfg.kernels,
                     col_sparse=col, fused_sgd=fused_sgd, with_losses=False,
                     mix_is_train=fused_sgd and mix_is_train(p), shd=shd)
         else:
             for p in plans:
                 stacked = apply_mixing(jnp.asarray(p.W), stacked,
-                                       use_kernel=cfg.use_kernel)
+                                       kernels=cfg.kernels)
                 xb, yb = _sample_batches(parts, data, cfg, batch_rng)
                 stacked, _ = WK.local_train(stacked, xb, yb,
                                             jnp.asarray(p.active),
@@ -572,7 +605,7 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
                     buf, w_j, c_j, ts_j, data_x, data_y, part_idx,
                     part_sizes, batch_key, spec=flat_spec, lr=cfg.lr,
                     local_steps=cfg.local_steps, batch_size=cfg.batch_size,
-                    use_kernel=cfg.use_kernel, col_sparse=col,
+                    kernels=cfg.kernels, col_sparse=col,
                     fused_sgd=fused_sgd, with_losses=False,
                     mix_is_train=mit, shd=shd)
             else:
@@ -604,7 +637,7 @@ def run_simulation(mechanism: Mechanism, cfg: SimConfig,
                     buf, w_j, c_j, data_x, data_y, part_idx, part_sizes,
                     batch_key, np.int32(p.t), spec=flat_spec, lr=cfg.lr,
                     local_steps=cfg.local_steps, batch_size=cfg.batch_size,
-                    use_kernel=cfg.use_kernel, col_sparse=col,
+                    kernels=cfg.kernels, col_sparse=col,
                     fused_sgd=fused_sgd, with_losses=False,
                     mix_is_train=mit, shd=shd)
             # track the NON-donated output: the buffer itself is donated

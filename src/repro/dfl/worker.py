@@ -200,30 +200,45 @@ def _pin_repl(x, shd):
 
 
 def _mix_rows(buf: jnp.ndarray, w_rows: jnp.ndarray, col_ids,
-              use_kernel: bool, shd=None) -> jnp.ndarray:
+              kernels, shd=None) -> jnp.ndarray:
     """The scatter-free Eq. 4 contraction: (k, N) @ (N, P), or column-sparse
     (k, u) @ (u, P) over the gathered union slab when ``col_ids`` is given.
     Single source for the kernel/jnp/mesh variants, shared by ``mix_flat``,
-    ``mix_flat_cols`` and the ``mix_is_train`` fused path.  With ``shd`` the
-    mesh-aware twins run (shard-local slab contraction + psum, or union
-    all_gather + output-row split); Pallas cannot be auto-partitioned, so
-    ``use_kernel`` is rejected host-side before a sharded dispatch."""
+    ``mix_flat_cols`` and the ``mix_is_train`` fused path.  ``kernels`` is a
+    ``kernels.config.KernelConfig`` (or None = reference): the Pallas backend
+    runs the VMEM panel schedule, and with ``shd`` its per-shard ``shard_map``
+    twins (shard-local panels + psum); the reference backend runs plain jnp,
+    with ``shd`` the GSPMD-constrained twins."""
+    use_pallas = kernels is not None and kernels.use_pallas
     if shd is not None:
         from repro.kernels import aggregate as AGG
+        if use_pallas:
+            interp = kernels.resolve_interpret()
+            if col_ids is not None:
+                return AGG.aggregate_rows_cols_sharded_kernel(
+                    w_rows, col_ids, buf, shd, p_blk=kernels.agg_p_blk,
+                    interpret=interp)
+            return AGG.aggregate_rows_sharded_kernel(
+                w_rows, buf, shd, p_blk=kernels.agg_p_blk, interpret=interp)
         return (AGG.aggregate_rows_cols_sharded(w_rows, col_ids, buf, shd)
                 if col_ids is not None
                 else AGG.aggregate_rows_sharded(w_rows, buf, shd))
-    if use_kernel:
-        from repro.kernels import ops as K
-        return (K.aggregate_rows_cols(w_rows, col_ids, buf)
-                if col_ids is not None else K.aggregate_rows(w_rows, buf))
+    if use_pallas:
+        from repro.kernels import aggregate as AGG
+        interp = kernels.resolve_interpret()
+        if col_ids is not None:
+            return AGG.aggregate_rows_cols(w_rows, col_ids, buf,
+                                           p_blk=kernels.agg_p_blk,
+                                           interpret=interp)
+        return AGG.aggregate_rows(w_rows, buf, p_blk=kernels.agg_p_blk,
+                                  interpret=interp)
     if col_ids is not None:
         return w_rows.astype(jnp.float32) @ buf[col_ids]
     return w_rows.astype(jnp.float32) @ buf
 
 
 def mix_flat(buf: jnp.ndarray, w_rows: jnp.ndarray, row_ids: jnp.ndarray,
-             use_kernel: bool = False, shd=None) -> jnp.ndarray:
+             kernels=None, shd=None) -> jnp.ndarray:
     """Sparse Eq. 4 over the flat buffer: mix the k non-identity rows only.
 
     ``w_rows`` (k, N) are the gathered rows of W (see
@@ -234,12 +249,12 @@ def mix_flat(buf: jnp.ndarray, w_rows: jnp.ndarray, row_ids: jnp.ndarray,
     """
     if w_rows.shape[0] == 0:
         return buf
-    buf = buf.at[row_ids].set(_mix_rows(buf, w_rows, None, use_kernel, shd))
+    buf = buf.at[row_ids].set(_mix_rows(buf, w_rows, None, kernels, shd))
     return _pin_rows(buf, shd)
 
 
 def mix_flat_cols(buf: jnp.ndarray, w_sub: jnp.ndarray, row_ids: jnp.ndarray,
-                  col_ids: jnp.ndarray, use_kernel: bool = False, shd=None
+                  col_ids: jnp.ndarray, kernels=None, shd=None
                   ) -> jnp.ndarray:
     """Column-sparse Eq. 4 over the flat buffer: the default mix hot path.
 
@@ -252,7 +267,7 @@ def mix_flat_cols(buf: jnp.ndarray, w_sub: jnp.ndarray, row_ids: jnp.ndarray,
     """
     if w_sub.shape[0] == 0:
         return buf
-    buf = buf.at[row_ids].set(_mix_rows(buf, w_sub, col_ids, use_kernel, shd))
+    buf = buf.at[row_ids].set(_mix_rows(buf, w_sub, col_ids, kernels, shd))
     return _pin_rows(buf, shd)
 
 
@@ -426,7 +441,7 @@ def _mix_train_body(buf: jnp.ndarray, w_rows: jnp.ndarray,
                     mix_row_ids: jnp.ndarray, col_ids,
                     train_row_ids: jnp.ndarray,
                     train_mask: jnp.ndarray, xb, yb, spec: FS.FlatSpec,
-                    lr: float, use_kernel: bool, fused_sgd: bool,
+                    lr: float, kernels, fused_sgd: bool,
                     with_losses: bool = True, mix_is_train: bool = False,
                     shd=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Mix + masked SGD on pre-sampled batches — the buffer-dependent half of
@@ -456,7 +471,18 @@ def _mix_train_body(buf: jnp.ndarray, w_rows: jnp.ndarray,
         sub = _pin(sub, sub_shd)
         x_s = _pin(xb, sub_shd)
         y_s = _pin(yb, sub_shd)
-        if fused_sgd:
+        if fused_sgd and kernels is not None and kernels.use_pallas:
+            from repro.kernels import fused_sgd as FSGD
+            interp = kernels.resolve_interpret()
+            if shd is not None:
+                new_sub, sub_loss = FSGD.fused_sgd_sharded(
+                    sub, x_s, y_s, train_mask, spec, lr, shd,
+                    with_losses=with_losses, interpret=interp)
+            else:
+                new_sub, sub_loss = FSGD.fused_sgd(
+                    sub, x_s, y_s, train_mask, spec, lr,
+                    with_losses=with_losses, interpret=interp)
+        elif fused_sgd:
             new_sub, sub_loss = local_sgd_flat_fused(sub, x_s, y_s,
                                                      train_mask, spec, lr,
                                                      with_losses=with_losses)
@@ -466,7 +492,7 @@ def _mix_train_body(buf: jnp.ndarray, w_rows: jnp.ndarray,
         return _pin(new_sub, sub_shd), sub_loss
 
     if fused_sgd and mix_is_train and k_train > 0 and w_rows.shape[0] > 0:
-        sub = _mix_rows(buf, w_rows, col_ids, use_kernel, shd)
+        sub = _mix_rows(buf, w_rows, col_ids, kernels, shd)
         new_sub, sub_loss = train_rows(sub)
         buf = _pin_rows(buf.at[train_row_ids].set(new_sub), shd)
         losses = jnp.zeros((n,), jnp.float32)
@@ -475,10 +501,9 @@ def _mix_train_body(buf: jnp.ndarray, w_rows: jnp.ndarray,
         return buf, _pin_repl(losses, shd)
     if col_ids is not None:
         buf = mix_flat_cols(buf, w_rows, mix_row_ids, col_ids,
-                            use_kernel=use_kernel, shd=shd)
+                            kernels=kernels, shd=shd)
     else:
-        buf = mix_flat(buf, w_rows, mix_row_ids, use_kernel=use_kernel,
-                       shd=shd)
+        buf = mix_flat(buf, w_rows, mix_row_ids, kernels=kernels, shd=shd)
     losses = jnp.zeros((n,), jnp.float32)
     if k_train == 0:
         return buf, losses
@@ -491,14 +516,14 @@ def _mix_train_body(buf: jnp.ndarray, w_rows: jnp.ndarray,
 
 @functools.partial(jax.jit,
                    static_argnames=("spec", "lr", "local_steps", "batch_size",
-                                    "use_kernel", "col_sparse", "fused_sgd",
+                                    "kernels", "col_sparse", "fused_sgd",
                                     "with_losses", "mix_is_train", "shd"),
                    donate_argnums=(0,))
 def round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
                data_x: jnp.ndarray, data_y: jnp.ndarray,
                part_idx: jnp.ndarray, part_sizes: jnp.ndarray, key, t,
                *, spec: FS.FlatSpec, lr: float, local_steps: int,
-               batch_size: int, use_kernel: bool = False,
+               batch_size: int, kernels=None,
                col_sparse: bool = False, fused_sgd: bool = False,
                with_losses: bool = True, mix_is_train: bool = False,
                shd=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -534,7 +559,7 @@ def round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
                                        part_sizes[train_row_ids],
                                        local_steps, batch_size)
     return _mix_train_body(buf, w_rows, mix_row_ids, col_ids, train_row_ids,
-                           train_mask, xb, yb, spec, lr, use_kernel,
+                           train_mask, xb, yb, spec, lr, kernels,
                            fused_sgd, with_losses, mix_is_train, shd)
 
 
@@ -708,14 +733,14 @@ def pack_chunk(plans, key, *, min_bucket: int = 8, col_sparse: bool = False,
 
 @functools.partial(jax.jit,
                    static_argnames=("spec", "lr", "local_steps", "batch_size",
-                                    "use_kernel", "col_sparse", "fused_sgd",
+                                    "kernels", "col_sparse", "fused_sgd",
                                     "with_losses", "mix_is_train", "shd"),
                    donate_argnums=(0,))
 def mega_round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
                     ts: jnp.ndarray, data_x: jnp.ndarray, data_y: jnp.ndarray,
                     part_idx: jnp.ndarray, part_sizes: jnp.ndarray, key,
                     *, spec: FS.FlatSpec, lr: float, local_steps: int,
-                    batch_size: int, use_kernel: bool = False,
+                    batch_size: int, kernels=None,
                     col_sparse: bool = False, fused_sgd: bool = False,
                     with_losses: bool = True, mix_is_train: bool = False,
                     shd=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -758,7 +783,7 @@ def mega_round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
         def body(b, xs):
             w, mids, cids, tids, mask, x, y = xs
             return _mix_train_body(b, w, mids, cids, tids, mask, x, y, spec,
-                                   lr, use_kernel, fused_sgd, with_losses,
+                                   lr, kernels, fused_sgd, with_losses,
                                    mix_is_train, shd)
 
         return jax.lax.scan(body, buf, (w_rows, mix_ids, col_ids, train_ids,
@@ -767,7 +792,7 @@ def mega_round_step(buf: jnp.ndarray, w_rows: jnp.ndarray, ctrl: jnp.ndarray,
     def body(b, xs):
         w, mids, tids, mask, x, y = xs
         return _mix_train_body(b, w, mids, None, tids, mask, x, y, spec, lr,
-                               use_kernel, fused_sgd, with_losses,
+                               kernels, fused_sgd, with_losses,
                                mix_is_train, shd)
 
     return jax.lax.scan(body, buf, (w_rows, mix_ids, train_ids, masks, xb, yb))

@@ -98,12 +98,13 @@ def aggregate_rows_cols(W_sub: jnp.ndarray, col_ids: jnp.ndarray,
 # --------------------------------------------------------------------------- #
 #
 # When the flat buffer is row-partitioned over the 1-D fleet mesh
-# (``sharding.rules.FleetSharding``) the contraction is expressed as jnp +
-# sharding constraints and GSPMD lowers the collectives; ``pallas_call``
-# cannot be auto-partitioned, so the Pallas panel schedule above stays the
-# single-device/TPU lowering (a per-shard shard_map wrapping of it is the
-# natural TPU follow-up once the mesh is real hardware).  Both twins are
-# value-exact against their dense oracles — only reduction order differs.
+# (``sharding.rules.FleetSharding``) the contraction comes in two lowerings:
+# the jnp + sharding-constraint twins below (GSPMD emits the collectives) and
+# the ``*_sharded_kernel`` shard_map twins further down, which run the SAME
+# Pallas panel schedule per shard and spell the collectives explicitly
+# (``pallas_call`` cannot be auto-partitioned, so the mesh composition is a
+# manual SPMD program).  All twins are value-exact against their dense
+# oracles — only reduction order differs.
 
 
 def aggregate_rows_sharded(W_rows: jnp.ndarray, X: jnp.ndarray,
@@ -134,6 +135,76 @@ def aggregate_rows_cols_sharded(W_sub: jnp.ndarray, col_ids: jnp.ndarray,
     slab = jax.lax.with_sharding_constraint(X[col_ids], shd.replicated())
     y = W_sub.astype(jnp.float32) @ slab
     return jax.lax.with_sharding_constraint(y, shd.for_rows(W_sub.shape[0]))
+
+
+def aggregate_rows_sharded_kernel(W_rows: jnp.ndarray, X: jnp.ndarray,
+                                  shd, p_blk: int = 512,
+                                  interpret: Optional[bool] = None
+                                  ) -> jnp.ndarray:
+    """shard_map Pallas twin of ``aggregate_rows_sharded``.
+
+    The contraction axis is the sharded axis, so the SPMD program is the
+    textbook inner-product split: each shard runs the VMEM panel schedule on
+    its resident ``(k, N_s) @ (N_s, P)`` slab of the row-partitioned buffer,
+    then one ``psum`` over the fleet axis completes Eq. 4 and replicates the
+    (k, P) mixed rows.  ``check_vma=False`` because ``pallas_call`` has no
+    replication-tracking rule under the jax 0.4.x check; the psum makes the
+    replication claim true by construction.
+    """
+    from jax.sharding import PartitionSpec
+    from repro.sharding.rules import shard_map
+    interp = _resolve_interpret(interpret)
+    ax = shd.axis
+
+    def fn(w_loc, x_loc):
+        y = _panel_matmul(w_loc, x_loc, p_blk, interp)
+        return jax.lax.psum(y, ax)
+
+    y = shard_map(fn, mesh=shd.mesh,
+                  in_specs=(PartitionSpec(None, ax), PartitionSpec(ax, None)),
+                  out_specs=PartitionSpec(), check_vma=False)(
+        W_rows.astype(jnp.float32), X.astype(jnp.float32))
+    return jax.lax.with_sharding_constraint(y, shd.replicated())
+
+
+def aggregate_rows_cols_sharded_kernel(W_sub: jnp.ndarray,
+                                       col_ids: jnp.ndarray, X: jnp.ndarray,
+                                       shd, p_blk: int = 512,
+                                       interpret: Optional[bool] = None
+                                       ) -> jnp.ndarray:
+    """shard_map Pallas twin of ``aggregate_rows_cols_sharded``.
+
+    Collective schedule (mirrors the GSPMD twin's traffic floor): each shard
+    masks the union gather to its resident row block — ``col_ids`` shifted
+    into local coordinates, out-of-block entries contributing zeros — and one
+    ``psum`` assembles the replicated (u, P) slab from exactly u rows of
+    cross-shard traffic.  The ``(k, u) @ (u, P)`` panel contraction then runs
+    per shard: over the k/S home output rows when k divides the mesh (the
+    scatter back is collective-free), else replicated whole, matching
+    ``FleetSharding.for_rows``.
+    """
+    from jax.sharding import PartitionSpec
+    from repro.sharding.rules import shard_map
+    interp = _resolve_interpret(interpret)
+    ax = shd.axis
+    k = W_sub.shape[0]
+    out_rows = bool(k) and k % shd.n_shards == 0
+
+    def fn(w_loc, cid, x_loc):
+        blk = x_loc.shape[0]
+        shard = jax.lax.axis_index(ax)
+        local = cid.astype(jnp.int32) - shard * blk
+        inb = (local >= 0) & (local < blk)
+        rows = x_loc[jnp.clip(local, 0, blk - 1)].astype(jnp.float32)
+        slab = jax.lax.psum(jnp.where(inb[:, None], rows, 0.0), ax)
+        return _panel_matmul(w_loc, slab, p_blk, interp)
+
+    row_spec = PartitionSpec(ax, None) if out_rows else PartitionSpec()
+    y = shard_map(fn, mesh=shd.mesh,
+                  in_specs=(row_spec, PartitionSpec(), PartitionSpec(ax, None)),
+                  out_specs=row_spec, check_vma=False)(
+        W_sub.astype(jnp.float32), col_ids, X)
+    return jax.lax.with_sharding_constraint(y, shd.for_rows(k))
 
 
 def _panel_matmul(W: jnp.ndarray, X: jnp.ndarray, p_blk: int,

@@ -1,0 +1,161 @@
+"""Pallas TPU kernel: fused multi-step local SGD (paper Eq. 5), VMEM-resident.
+
+The sim plane's training hot spot is ``local_sgd_flat_fused`` in
+``dfl/worker.py``: k gathered worker rows of the flat (N, P) buffer each take
+``local_steps`` SGD steps on a 3-layer relu MLP.  The jnp lowering is a chain
+of batched tiny gemms — every step re-reads and re-writes the (k, P) weight
+slab through HBM.  This kernel makes the weights RESIDENT: grid (k,), one
+worker row per program, the (1, P) buffer block loaded into VMEM once,
+sliced into the six MLP leaves, carried through the statically-unrolled step
+loop as values (registers/VMEM), and written back exactly once.  Per-worker
+minibatches for all steps ride in as one (1, steps, batch, dim) block.
+
+Numerics mirror the manual-backward oracle op for op — same forward, same
+closed-form ``softmax(logits) - onehot`` cross-entropy backward, same
+``with_losses`` split (``False`` drops the log-sum-exp chain and reports
+zeros), same zero-scaled update for inactive rows (their buffer row is
+bit-identical out).  The oracle stays the source of truth in tests; interpret
+mode is the CI gate (TPU numbers are a separate claim, docs/BENCHMARKS.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.aggregate import _resolve_interpret
+
+_LEAVES = ("b1", "b2", "b3", "w1", "w2", "w3")   # FlatSpec leaf (sort) order
+
+
+def _dot(a, b):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def _make_kernel(steps: int, shapes: tuple, offsets: tuple,
+                 with_losses: bool):
+    shp = dict(zip(_LEAVES, shapes))
+    off = dict(zip(_LEAVES, offsets))
+    d, h = shp["w1"]
+    g = shp["w2"][1]
+    c = shp["w3"][1]
+
+    def kernel(buf_ref, x_ref, y_ref, scale_ref, out_ref, loss_ref):
+        row = buf_ref[0].astype(jnp.float32)                  # (P,) in VMEM
+        b1 = row[off["b1"]:off["b1"] + h]
+        b2 = row[off["b2"]:off["b2"] + g]
+        b3 = row[off["b3"]:off["b3"] + c]
+        w1 = row[off["w1"]:off["w1"] + d * h].reshape(d, h)
+        w2 = row[off["w2"]:off["w2"] + h * g].reshape(h, g)
+        w3 = row[off["w3"]:off["w3"] + g * c].reshape(g, c)
+        s = scale_ref[0, 0]                                   # active * lr
+        losses = []
+        for t in range(steps):                    # static, unrolled: weights
+            x = x_ref[0, t].astype(jnp.float32)   # stay resident across steps
+            y = y_ref[0, t]
+            batch = x.shape[0]
+            z1 = _dot(x, w1) + b1
+            h1 = jax.nn.relu(z1)
+            z2 = _dot(h1, w2) + b2
+            h2 = jax.nn.relu(z2)
+            logits = _dot(h2, w3) + b3
+            onehot = (jax.lax.broadcasted_iota(jnp.int32, (batch, c), 1)
+                      == y[:, None]).astype(jnp.float32)
+            if with_losses:
+                logp = jax.nn.log_softmax(logits, axis=-1)
+                losses.append(-jnp.sum(logp * onehot, -1).mean())
+                probs = jnp.exp(logp)
+            else:
+                probs = jax.nn.softmax(logits, axis=-1)
+            dz = (probs - onehot) / batch         # d(mean CE)/d logits
+            g_w3 = _dot(h2.T, dz)
+            g_b3 = dz.sum(0)
+            dh2 = _dot(dz, w3.T) * (z2 > 0)
+            g_w2 = _dot(h1.T, dh2)
+            g_b2 = dh2.sum(0)
+            dh1 = _dot(dh2, w2.T) * (z1 > 0)
+            g_w1 = _dot(x.T, dh1)
+            g_b1 = dh1.sum(0)
+            w1, b1 = w1 - s * g_w1, b1 - s * g_b1
+            w2, b2 = w2 - s * g_w2, b2 - s * g_b2
+            w3, b3 = w3 - s * g_w3, b3 - s * g_b3
+        out_ref[0, :] = jnp.concatenate(
+            [b1, b2, b3, w1.reshape(-1), w2.reshape(-1), w3.reshape(-1)])
+        loss_ref[0, :] = (jnp.stack(losses) if with_losses
+                          else jnp.zeros((steps,), jnp.float32))
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "lr", "with_losses", "interpret"))
+def fused_sgd(buf: jnp.ndarray, xb: jnp.ndarray, yb: jnp.ndarray,
+              active: jnp.ndarray, spec, lr: float,
+              with_losses: bool = True,
+              interpret: Optional[bool] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """``local_sgd_flat_fused``'s contract on the Pallas kernel plane.
+
+    buf (k, P) f32 gathered worker rows; xb (k, steps, batch, dim);
+    yb (k, steps, batch) int labels; active (k,).  Returns the updated
+    (k, P) rows and the (k,) per-worker mean loss over steps (zeros when
+    ``with_losses=False``).  Requires ``fused_sgd_supported(spec)``.
+    """
+    k, p = buf.shape
+    steps, batch = xb.shape[1], xb.shape[2]
+    scale = (active.astype(jnp.float32) * lr).reshape(k, 1)
+    kern = _make_kernel(steps, tuple(spec.shapes), tuple(spec.offsets),
+                        with_losses)
+    out, step_losses = pl.pallas_call(
+        kern,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, p), lambda i: (i, 0)),               # weights
+            pl.BlockSpec((1, steps, batch, xb.shape[3]),
+                         lambda i: (i, 0, 0, 0)),                 # minibatches
+            pl.BlockSpec((1, steps, batch), lambda i: (i, 0, 0)),  # labels
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),               # active*lr
+        ],
+        out_specs=[
+            pl.BlockSpec((1, p), lambda i: (i, 0)),
+            pl.BlockSpec((1, steps), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, p), jnp.float32),
+            jax.ShapeDtypeStruct((k, steps), jnp.float32),
+        ],
+        interpret=_resolve_interpret(interpret),
+    )(buf.astype(jnp.float32), xb, yb, scale)
+    return out, step_losses.mean(axis=1)
+
+
+def fused_sgd_sharded(buf: jnp.ndarray, xb: jnp.ndarray, yb: jnp.ndarray,
+                      active: jnp.ndarray, spec, lr: float, shd,
+                      with_losses: bool = True,
+                      interpret: Optional[bool] = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """shard_map wrapper: Eq. 5 is row-local, so the SPMD program is
+    embarrassingly parallel — the gathered rows (and their batches) split
+    over the fleet axis when k divides the mesh (``FleetSharding.for_rows``
+    row layout), with zero collectives; odd k falls back to replicated
+    compute, matching the engine's replication of small buckets."""
+    from jax.sharding import PartitionSpec
+    from repro.sharding.rules import shard_map
+    k = buf.shape[0]
+    if not k or k % shd.n_shards:
+        return fused_sgd(buf, xb, yb, active, spec, lr,
+                         with_losses=with_losses, interpret=interpret)
+    ax = shd.axis
+    fn = functools.partial(fused_sgd, spec=spec, lr=lr,
+                           with_losses=with_losses, interpret=interpret)
+    rows = PartitionSpec(ax)
+    new, loss = shard_map(fn, mesh=shd.mesh,
+                          in_specs=(rows, rows, rows, rows),
+                          out_specs=(rows, rows), check_vma=False)(
+        buf, xb, yb, active)
+    sharding = shd.for_rows(k)
+    return (jax.lax.with_sharding_constraint(new, sharding),
+            jax.lax.with_sharding_constraint(loss, sharding))

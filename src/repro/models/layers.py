@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops as K
 from repro.sharding.rules import constrain
 
 Params = Dict[str, Any]
@@ -192,7 +193,19 @@ def multihead_attention(
     B, Sq = q.shape[0], q.shape[1]
     G = cfg.q_per_kv
     qg = q.reshape(B, Sq, cfg.n_kv_heads, G, hd)
-    if cfg.attn_impl == "chunked" and cache is None and kv_x is None:
+    if (cfg.kernels.use_pallas and cache is None and kv_x is None
+            and spec.prefix_len == 0):
+        # Pallas flash kernel (reference backward via custom_vjp).  The
+        # kernel wants (B, H, S, hd) with kv heads pre-broadcast for GQA;
+        # head index h = kv_idx * G + g matches the qg reshape above.
+        qh = jnp.swapaxes(qg.reshape(B, Sq, cfg.n_heads, hd), 1, 2)
+        kh = jnp.swapaxes(jnp.repeat(k, G, axis=2), 1, 2)
+        vh = jnp.swapaxes(jnp.repeat(v, G, axis=2), 1, 2)
+        out = K.flash_attention_diff(qh, kh, vh, cfg.kernels,
+                                     causal=spec.causal, window=spec.window,
+                                     softcap=spec.softcap)
+        out = jnp.swapaxes(out, 1, 2)                  # (B, Sq, H, hd)
+    elif cfg.attn_impl == "chunked" and cache is None and kv_x is None:
         out = _chunked_attention(cfg, qg, k, v, spec)
     else:
         scores = jnp.einsum("bsngk,btnk->bnsgt", qg, k).astype(jnp.float32)

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops as K
 from repro.sharding.rules import constrain
 
 Params = Dict[str, Any]
@@ -69,8 +70,14 @@ def route(cfg: ModelConfig, router: jnp.ndarray, x: jnp.ndarray):
     m = cfg.moe
     logits = (x.astype(jnp.float32) @ router).astype(jnp.float32)  # (T, E)
     probs = jax.nn.softmax(logits, axis=-1)
-    gates, eids = jax.lax.top_k(probs, m.top_k)
-    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    if cfg.kernels.use_pallas:
+        # fused softmax -> top-k -> renorm on the Pallas plane; the aux loss
+        # below still reads the JAX softmax probs of the same logits
+        gates, eids = K.moe_router_diff(logits, m.top_k, cfg.kernels)
+    else:
+        gates, eids = jax.lax.top_k(probs, m.top_k)
+        gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True),
+                                    1e-9)
     # load-balance auxiliary loss (Switch-style): E * sum_e f_e * p_e
     pe = jnp.mean(probs, axis=0)
     fe = jnp.mean(

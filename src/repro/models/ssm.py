@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, SSMConfig
+from repro.kernels import ops as K
 from repro.sharding.rules import constrain
 
 Params = Dict[str, Any]
@@ -119,11 +120,22 @@ def ssm_forward(cfg: ModelConfig, p: Params, x_res: jnp.ndarray) -> jnp.ndarray:
     xc = xbar.reshape(Bsz, nc, Q, H, P_)
 
     # ---- intra-chunk (quadratic dual form) ----
-    cb = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)                # (B,nc,Q,Q)
-    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (B,nc,Q,Q,H)
-    causal = jnp.tril(jnp.ones((Q, Q), bool))
-    L = jnp.where(causal[None, None, :, :, None], jnp.exp(decay), 0.0)
-    y_intra = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", cb, L, xc)
+    if cfg.kernels.use_pallas:
+        # Pallas ssd_chunk kernel (reference backward).  Kernel layout is
+        # head-major (G, H, Q, ·) with G = batch * n_chunks.
+        G = Bsz * nc
+        y_k = K.ssd_chunk_diff(
+            Bc.reshape(G, Q, s.d_state), Cc.reshape(G, Q, s.d_state),
+            jnp.transpose(cum.reshape(G, Q, H), (0, 2, 1)),
+            jnp.transpose(xc.reshape(G, Q, H, P_), (0, 2, 1, 3)),
+            cfg.kernels)
+        y_intra = jnp.transpose(y_k, (0, 2, 1, 3)).reshape(Bsz, nc, Q, H, P_)
+    else:
+        cb = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)            # (B,nc,Q,Q)
+        decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+        causal = jnp.tril(jnp.ones((Q, Q), bool))
+        L = jnp.where(causal[None, None, :, :, None], jnp.exp(decay), 0.0)
+        y_intra = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", cb, L, xc)
 
     # ---- chunk boundary states + inter-chunk scan ----
     decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)           # (B,nc,Q,H)

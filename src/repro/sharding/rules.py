@@ -27,6 +27,17 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:                                  # jax >= 0.5 top-level API
+    from jax import shard_map
+except ImportError:                   # jax 0.4.x: experimental API, and the
+    from jax.experimental.shard_map import shard_map as _shard_map_experimental
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        # the old API spells the replication check ``check_rep``
+        return _shard_map_experimental(f, mesh=mesh, in_specs=in_specs,
+                                       out_specs=out_specs,
+                                       check_rep=check_vma)
+
 # Default logical->mesh rules.  Values are tuples of mesh axis names (applied
 # jointly to one tensor dim) or None (replicated).
 DEFAULT_RULES: Dict[str, Optional[Tuple[str, ...]]] = {

@@ -12,6 +12,7 @@ from repro.core import ptca as PT
 from repro.core import waa as WA
 from repro.core.aggregation import apply_mixing, mixing_matrix
 from repro.core.staleness import StalenessState, drift_plus_penalty
+from repro.kernels.config import KernelConfig
 
 
 # --------------------------------------------------------------------------- #
@@ -198,10 +199,15 @@ def test_apply_mixing_kernel_equals_matmul():
                                   rng.random((n, n)) < 0.4, rng.integers(1, 9, n)))
     tree = {"a": jnp.asarray(rng.normal(size=(n, 13, 7)), jnp.float32),
             "b": jnp.asarray(rng.normal(size=(n, 40)), jnp.float32)}
-    out_k = apply_mixing(W, tree, use_kernel=True)
-    out_j = apply_mixing(W, tree, use_kernel=False)
+    out_k = apply_mixing(W, tree, kernels=KernelConfig(backend="pallas"))
+    out_j = apply_mixing(W, tree)
     for k in tree:
         np.testing.assert_allclose(out_k[k], out_j[k], rtol=1e-5, atol=1e-5)
+    # deprecated boolean still routes (and warns)
+    with pytest.warns(DeprecationWarning):
+        out_d = apply_mixing(W, tree, use_kernel=True)
+    for k in tree:
+        np.testing.assert_array_equal(out_d[k], out_k[k])
 
 
 # --------------------------------------------------------------------------- #

@@ -64,8 +64,8 @@ def test_fleet_learns_and_aggregates():
         links = np.zeros((n, n), bool)
         links[t % n] = ~active
         W = mixing_matrix(active, links, np.ones(n))
-        fleet.stacked_params = apply_mixing(jnp.asarray(W), fleet.stacked_params,
-                                            use_kernel=False)
+        fleet.stacked_params = apply_mixing(jnp.asarray(W),
+                                            fleet.stacked_params)
         fleet.stacked_params, fleet.stacked_opt, losses = step(
             fleet.stacked_params, fleet.stacked_opt, batch, jnp.asarray(active))
         mean_losses.append(float(jnp.mean(losses)))

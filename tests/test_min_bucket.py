@@ -11,6 +11,7 @@ from repro.core.planner import chunk_spans
 from repro.core.protocol import DySTop
 from repro.dfl import lm_worker as LW
 from repro.dfl.simulator import SimConfig, run_simulation
+from repro.kernels.config import KernelConfig
 from repro.models import registry as R
 
 
@@ -43,7 +44,8 @@ def test_lm_min_bucket_bit_identical_and_compile_count():
               seed=1, lr=1.000001e-3)
     f8, h8 = LW.run_lm_federation(_mech(), cfg,
                                   LW.LMRunConfig(min_bucket=8, **kw))
-    engine = LW.get_lm_engine(cfg, f8.optimizer, f8.spec, False, None)
+    engine = LW.get_lm_engine(cfg, f8.optimizer, f8.spec,
+                              KernelConfig(), None)
     megas = list(engine._mega_cache.values())
     if not all(hasattr(m, "_cache_size") for m in megas):
         pytest.skip("jitted _cache_size introspection unavailable")

@@ -72,7 +72,12 @@ def test_smoke_decode_step(arch):
     pytest.param("grok-1-314b", marks=pytest.mark.xfail(
         strict=False,
         reason="known pre-existing failure under jax 0.4.37: grok smoke "
-               "decode drifts beyond the bf16 tolerance; see ROADMAP"))])
+               "decode drifts beyond the bf16 tolerance (re-triaged PR 10: "
+               "still fails, maxdiff ~0.77 / meandiff ~0.01 — consistent "
+               "with bf16 rounding flipping near-tie MoE top-k routing "
+               "between the parallel and cached paths on a few positions; "
+               "unrelated to the kernel plane, which keeps the reference "
+               "path for cached decode); see ROADMAP"))])
 def test_decode_matches_forward(arch):
     """Greedy decode through the cache must reproduce the parallel forward
     logits position-by-position (validates ring buffers, SSM recurrence vs

@@ -22,6 +22,7 @@ from repro.dfl import flat_state as FS
 from repro.dfl import worker as WK
 from repro.dfl.simulator import SimConfig, run_simulation
 from repro.kernels import ops as K
+from repro.kernels.config import KernelConfig
 
 
 def _random_tree(key, n=12):
@@ -61,8 +62,8 @@ def test_unravel_row_matches_leaf_slices():
 
 
 @pytest.mark.parametrize("seed", range(5))
-@pytest.mark.parametrize("use_kernel", [False, True])
-def test_sparse_matches_dense_random_masks(seed, use_kernel):
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_sparse_matches_dense_random_masks(seed, backend):
     rng = np.random.default_rng(seed)
     n, p = 24, 140
     active = rng.random(n) < rng.uniform(0.1, 0.9)
@@ -73,7 +74,7 @@ def test_sparse_matches_dense_random_masks(seed, use_kernel):
 
     w_rows, row_ids = mixing_rows(W, active, links)
     out_sparse = WK.mix_flat(X, jnp.asarray(w_rows), jnp.asarray(row_ids),
-                             use_kernel=use_kernel)
+                             kernels=KernelConfig(backend=backend))
     out_dense = jnp.asarray(W) @ X
     np.testing.assert_allclose(out_sparse, out_dense, rtol=1e-5, atol=1e-5)
     # identity rows must come back bit-stable (never touched by the scatter)
@@ -229,8 +230,9 @@ def test_fused_history_matches_legacy():
 def test_fused_kernel_path_matches_fused_jnp_path():
     """Same engine + same batch keys: only the mix arithmetic differs."""
     mech = lambda: DySTop(V=10.0, t_thre=10, max_neighbors=5)
-    h_k = run_simulation(mech(), _cfg(n_rounds=20, use_kernel=True))
-    h_j = run_simulation(mech(), _cfg(n_rounds=20, use_kernel=False))
+    h_k = run_simulation(mech(), _cfg(
+        n_rounds=20, kernels=KernelConfig(backend="pallas")))
+    h_j = run_simulation(mech(), _cfg(n_rounds=20))
     np.testing.assert_allclose(h_k.acc_global, h_j.acc_global, atol=0.02)
     np.testing.assert_allclose(h_k.sim_time, h_j.sim_time, rtol=0)
 

@@ -169,7 +169,7 @@ def test_sharded_mix_matches_dense(shards):
 
     w_rows, row_ids = mixing_rows(W, active, links, min_bucket=4,
                                   shards=shards)
-    out = jax.jit(WK.mix_flat, static_argnames=("use_kernel", "shd"))(
+    out = jax.jit(WK.mix_flat, static_argnames=("kernels", "shd"))(
         Xs, shd.put(jnp.asarray(w_rows)), shd.put(jnp.asarray(row_ids)),
         shd=shd)
     assert out.sharding == shd.rows()
@@ -177,7 +177,7 @@ def test_sharded_mix_matches_dense(shards):
 
     w_sub, row_ids2, col_ids = mixing_rows_cols(W, active, links,
                                                 min_bucket=4, shards=shards)
-    out2 = jax.jit(WK.mix_flat_cols, static_argnames=("use_kernel", "shd"))(
+    out2 = jax.jit(WK.mix_flat_cols, static_argnames=("kernels", "shd"))(
         Xs, shd.put(jnp.asarray(w_sub)), shd.put(jnp.asarray(row_ids2)),
         shd.put(jnp.asarray(col_ids)), shd=shd)
     assert out2.sharding == shd.rows()
@@ -305,9 +305,20 @@ def test_sim_sharded_row_sparse_path(shards=2):
     np.testing.assert_allclose(hs.acc_global, h1.acc_global, atol=2e-2)
 
 
-def test_sim_mesh_with_kernel_rejected():
-    with pytest.raises(ValueError, match="use_kernel"):
-        run_simulation(_sim_mech(), _sim_cfg(mesh_shards=2, use_kernel=True))
+@needs_devices(2)
+def test_sim_mesh_with_kernel_composes():
+    """PR 10: Pallas + mesh_shards is no longer rejected — the shard_map
+    panel kernels carry the mix, and the control plane stays bit-identical
+    to the single-device pallas run."""
+    from repro.kernels.config import KernelConfig
+    kw = dict(n_workers=10, n_rounds=12, eval_every=6, n_samples=1500,
+              kernels=KernelConfig(backend="pallas"))
+    h1 = _cached("mesh_kernel_base", lambda: run_simulation(
+        _sim_mech(), _sim_cfg(**kw)))
+    hs = run_simulation(_sim_mech(), _sim_cfg(mesh_shards=2, **kw))
+    for f in _CONTROL_FIELDS:
+        assert getattr(hs, f) == getattr(h1, f), f
+    np.testing.assert_allclose(hs.acc_global, h1.acc_global, atol=2e-2)
 
 
 def test_sim_mesh_requires_fused_engine():

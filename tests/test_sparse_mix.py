@@ -27,6 +27,7 @@ from repro.dfl import flat_state as FS
 from repro.dfl import worker as WK
 from repro.dfl.simulator import SimConfig, run_simulation
 from repro.kernels import ops as K
+from repro.kernels.config import KernelConfig
 from repro.kernels.ref import aggregate_rows_cols_ref
 
 
@@ -82,8 +83,8 @@ def test_plan_buckets_cols_extends_plan_buckets():
 
 
 @pytest.mark.parametrize("seed", range(6))
-@pytest.mark.parametrize("use_kernel", [False, True])
-def test_col_sparse_matches_dense_random_masks(seed, use_kernel):
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_col_sparse_matches_dense_random_masks(seed, backend):
     """Sweeps activation density so u hits several buckets incl. u = N."""
     rng = np.random.default_rng(seed)
     n, p = 32, 140
@@ -92,7 +93,8 @@ def test_col_sparse_matches_dense_random_masks(seed, use_kernel):
 
     w_sub, row_ids, col_ids = mixing_rows_cols(W, active, links)
     out = WK.mix_flat_cols(X, jnp.asarray(w_sub), jnp.asarray(row_ids),
-                           jnp.asarray(col_ids), use_kernel=use_kernel)
+                           jnp.asarray(col_ids),
+                           kernels=KernelConfig(backend=backend))
     np.testing.assert_allclose(out, jnp.asarray(W) @ X, rtol=1e-5, atol=1e-5)
     # rows outside the mix set are never touched by the scatter
     idle = ~(active | links.any(axis=1))
